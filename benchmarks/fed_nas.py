@@ -1,0 +1,104 @@
+"""Shared harness for the paper-shaped federated NAS experiments.
+
+Scaled to this container (16x16 synthetic images, tens of generations) —
+the *relative* claims of the paper (RT vs offline cost, Pareto shape,
+FLOPs reduction vs the fixed baseline) are what the benchmarks validate;
+see DESIGN.md Section 8 for the simulation boundary.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_api, nsga2, offline_enas, rt_enas
+from repro.core.federated import fedavg_round, make_client_update, \
+    make_evaluator, weighted_test_error
+from repro.data import make_classification, make_clients, partition_iid, \
+    partition_label
+
+IMAGE = 16
+RESNET_LIKE_KEY = np.ones(4, dtype=np.int32)   # all-residual master path
+
+
+def build_clients(num_clients: int, iid: bool, seed: int = 0,
+                  n: int = 2000, batch: int = 50, test_batch: int = 50):
+    x, y = make_classification(seed, n, image=IMAGE, signal=1.2, noise=0.8)
+    if iid:
+        shards = partition_iid(seed, n, num_clients)
+    else:
+        shards = partition_label(seed, y, num_clients, classes_per_client=5)
+    return make_clients(x, y, shards, batch=batch, test_batch=test_batch)
+
+
+def build_api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+def run_rt(api, clients, generations: int, population: int = 6,
+           seed: int = 0, backend: str = "xla") -> Dict:
+    rc = rt_enas.RunConfig(population=population, generations=generations,
+                           seed=seed, aggregate_backend=backend)
+    return rt_enas.run(api, clients, rc)
+
+
+def run_offline(api, clients, generations: int, population: int = 6,
+                seed: int = 0) -> Dict:
+    rc = rt_enas.RunConfig(population=population, generations=generations,
+                           seed=seed)
+    return offline_enas.run(api, clients, rc)
+
+
+def run_fixed_baseline(api, clients, rounds: int, key=RESNET_LIKE_KEY,
+                       seed: int = 0) -> Dict:
+    """FedAvg on a fixed architecture (the paper's ResNet18 role)."""
+    from repro.optim import round_decay
+    params = api.init(jax.random.PRNGKey(seed))
+    update = make_client_update(api)
+    evaluate = make_evaluator(api)
+    jkey = jnp.asarray(key)
+    errs = []
+    for t in range(rounds):
+        lr = float(round_decay(0.1, 0.995, t))
+        params = fedavg_round(update, params, jkey, clients, lr)
+        errs.append(weighted_test_error(evaluate, params, jkey, clients))
+    return {"err": errs, "flops": api.flops(np.asarray(key)),
+            "params": params}
+
+
+def summarize_front(api, hist) -> List[Dict]:
+    """Final-generation Pareto front -> [{key, err, flops}] (Fig 8)."""
+    objs = hist["objs"][-1]
+    sel = nsga2.select(objs, len(hist["parent_keys"][-1]))
+    front = nsga2.fast_non_dominated_sort(objs[sel])[0]
+    combined_keys = hist["parent_keys"][-1]
+    out = []
+    for i in front:
+        out.append({"err": float(objs[sel][i, 0]),
+                    "flops": float(objs[sel][i, 1])})
+    out.sort(key=lambda r: r["flops"])
+    return out
+
+
+def save_history(path: str, hist: Dict, extra: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    rec = {
+        "gen": hist["gen"],
+        "best_err": hist["best_err"],
+        "knee_err": hist.get("knee_err"),
+        "down_gb": hist["down_gb"],
+        "up_gb": hist["up_gb"],
+        "train_passes": hist["train_passes"],
+        "wall_s": hist["wall_s"],
+        "final_objs": np.asarray(hist["objs"][-1]).tolist(),
+    }
+    if extra:
+        rec.update(extra)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)

@@ -1,0 +1,126 @@
+"""Aggregate the dry-run JSON records into the §Roofline table.
+
+Reads benchmarks/results/dryrun_*.json (written by launch/dryrun.py --save)
+and emits a markdown table: three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio and a one-line 'what would move the dominant term'
+note per (arch x shape).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+ADVICE = {
+    ("memory", "train"): "fuse attention (Pallas flash) to stop spilling "
+                         "fp32 scores to HBM; bigger microbatch splits",
+    ("memory", "prefill"): "flash-attention kernel (scores stay in VMEM)",
+    ("memory", "decode"): "batch more requests per step to amortize the "
+                          "weight sweep (decode reads all params per token)",
+    ("compute", "train"): "reduce remat recompute (checkpoint every 2nd "
+                          "layer); MXU-align matmul dims",
+    ("compute", "prefill"): "MXU-align head dims; overlap collectives",
+    ("compute", "decode"): "speculative/multi-token decoding",
+    ("collective", "train"): "reduce-scatter grads instead of all-reduce; "
+                             "overlap collectives with compute",
+    ("collective", "prefill"): "shard kv-seq instead of heads to cut "
+                               "all-gathers",
+    ("collective", "decode"): "replicate small weights; fold pod axis into "
+                              "data to shorten all-reduce chains",
+}
+
+
+def analytic_hbm_floor_s(rec: Dict) -> float:
+    """Minimum HBM traffic per step per chip, from first principles —
+    the counterweight to XLA:CPU's inflated 'bytes accessed' (which counts
+    every unfused elementwise op).  Weights/optimizer are read/written
+    once per step; activations are written+read once per layer.
+    """
+    from repro.configs import get_config, get_shape
+    from repro.core import flops as fl
+
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec.get("chips", 256)
+    w = fl.model_params(cfg) * 2                    # bf16 weights
+    w_active = fl.model_params(cfg, active_only=True) * 2
+    toks = shape.global_batch * shape.seq_len
+    act = 2 * 2 * toks * cfg.d_model * cfg.num_layers  # write+read, bf16
+    if shape.kind == "train":
+        total = 4 * w + 2 * act                     # w+grad+mom r/w, remat 2x
+    elif shape.kind == "prefill":
+        total = w + act
+    else:  # decode: every active weight + the whole cache per token
+        cl = min(shape.seq_len, cfg.sliding_window) if shape.sliding \
+            else shape.seq_len
+        if cfg.family in ("ssm",):
+            cache = (shape.global_batch * cfg.ssm_heads * cfg.ssm_head_dim
+                     * cfg.ssm_state * 4 * cfg.num_layers)
+        else:
+            cache = (shape.global_batch * cl * cfg.num_kv_heads * cfg.hd
+                     * 2 * 2 * cfg.num_layers)
+        total = w_active + cache
+    return total / chips / 819e9
+
+
+def load_records(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == tag \
+                and not r.get("supernet"):
+            recs.append(r)
+    return recs
+
+
+def fmt_table(recs: List[Dict]) -> str:
+    head = ("| arch | shape | compute ms | memory ms (XLA:CPU) | "
+            "mem floor ms | collective ms | bound | bound(floor) | "
+            "MODEL/HLO | temp GB/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if "compute_s" not in r:
+            continue
+        floor = analytic_hbm_floor_s(r)
+        bound_floor = max(
+            ("compute", r["compute_s"]), ("memory", floor),
+            ("collective", r["collective_s"]), key=lambda kv: kv[1])[0]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {floor*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {bound_floor} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r.get('temp_size_in_bytes', 0)/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def advice_lines(recs: List[Dict]) -> List[str]:
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if "dominant" not in r:
+            continue
+        key = (r["dominant"], r["kind"])
+        out.append(f"- {r['arch']} x {r['shape']}: {r['dominant']}-bound -> "
+                   f"{ADVICE.get(key, 'profile further')}")
+    return out
+
+
+def main() -> None:
+    recs = load_records()
+    print(fmt_table(recs))
+    print()
+    counts = {}
+    for r in recs:
+        counts[r.get("dominant", "?")] = counts.get(r.get("dominant", "?"), 0) + 1
+    print("dominant-term histogram:", counts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Flat-key npz pytree checkpointing (no external deps).
+
+Leaves are saved under '/'-joined key paths; restore rebuilds against a
+template pytree so dtypes/structure are validated, and arrays are placed on
+the template's shardings when one is supplied (multi-host restore).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(re.sub(r"[\[\]'.]", "", str(p)) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":      # bf16 etc: not numpy-native
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree: Params, step: Optional[int] = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"step_{step:08d}.npz")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    return path
+
+
+def load_pytree(path: str, template: Params) -> Params:
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(re.sub(r"[\[\]'.]", "", str(x)) for x in p)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: ckpt {arr.shape} != template {leaf.shape}")
+        sharding = getattr(leaf, "sharding", None)
+        arr = jax.device_put(jnp.asarray(arr).astype(leaf.dtype), sharding)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str, template: Params):
+    if not os.path.isdir(ckpt_dir):
+        return None, -1
+    files = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    if not files:
+        return None, -1
+    step = int(files[-1][5:-4])
+    return load_pytree(os.path.join(ckpt_dir, files[-1]), template), step

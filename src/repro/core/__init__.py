@@ -1,0 +1,14 @@
+"""The paper's primary contribution: real-time federated evolutionary NAS
+(double-sampling + fill-aggregation + NSGA-II in one communication round)."""
+from repro.core import (
+    aggregate, choice, double_sampling, federated, flops, nsga2,
+    offline_enas, rt_enas, supernet,
+)
+from repro.core.rt_enas import CommStats, RunConfig
+from repro.core.supernet import SupernetAPI, make_api
+
+__all__ = [
+    "aggregate", "choice", "double_sampling", "federated", "flops", "nsga2",
+    "offline_enas", "rt_enas", "supernet", "CommStats", "RunConfig",
+    "SupernetAPI", "make_api",
+]

@@ -1,0 +1,141 @@
+"""Fill-aggregation (paper Algorithm 3).
+
+Clients upload sub-models; the server reconstructs full master models by
+*filling* the branches a client did not train with the previous master's
+weights, then weighted-averages the reconstructions:
+
+    theta(t) = sum_k w_k * ( mask_k * theta_k + (1 - mask_k) * theta(t-1) )
+
+``mask_k`` marks the leaves client k actually trained, derived from its
+choice key.  Non-choice-block leaves (stem, embeddings, norms, heads) have
+mask 1 — they are trained by every client and plain-FedAvg'd, exactly the
+``theta_k^i not in choice blocks`` case of Algorithm 3.
+
+The reduction touches m x |theta| bytes and is the server-side hot spot at
+production scale; ``repro.kernels.ops.fill_aggregate`` is the Pallas TPU
+version of the flat inner loop (this module is its oracle).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Trained-leaf masks per model family
+# ---------------------------------------------------------------------------
+
+def cnn_trained_mask(params: Params, key: np.ndarray) -> Params:
+    """Mask tree for the CIFAR CNN supernet (cnn.init_params layout)."""
+    from repro.models.cnn import BRANCH_NAMES
+
+    def ones_like(t):
+        return jax.tree.map(lambda x: jnp.ones((), x.dtype), t)
+
+    mask = {"stem": jnp.ones(()), "fc": ones_like(params["fc"]), "blocks": []}
+    for i, blk in enumerate(params["blocks"]):
+        bm = {}
+        for b, name in enumerate(BRANCH_NAMES):
+            sel = jnp.asarray(key[i] == b, jnp.float32)
+            bm[name] = jax.tree.map(lambda x: sel, blk[name])
+        mask["blocks"].append(bm)
+    return mask
+
+
+def supernet_trained_mask(params: Params, key: np.ndarray) -> Params:
+    """Mask tree for transformer supernets: layer leaves are (L, 3, ...);
+    branch b of layer l is trained iff key[l] == b + 1 (0 = identity trains
+    nothing).  Everything outside ``layers`` is trained by every client."""
+    key = jnp.asarray(key, jnp.int32)
+
+    def layer_mask(x):
+        l, nb = x.shape[0], x.shape[1]
+        sel = (key[:, None] - 1) == jnp.arange(nb)[None, :]
+        return sel.astype(jnp.float32).reshape((l, nb) + (1,) * (x.ndim - 2))
+
+    mask = {}
+    for k, v in params.items():
+        if k == "layers":
+            mask[k] = jax.tree.map(layer_mask, v)
+        else:
+            mask[k] = jax.tree.map(lambda x: jnp.ones((), jnp.float32), v)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3
+# ---------------------------------------------------------------------------
+
+def fill_aggregate(prev_master: Params,
+                   uploads: Sequence[Tuple[Params, Params, float]],
+                   backend: str = "xla") -> Params:
+    """uploads: [(client_params, trained_mask, weight n_k/n)].  Weights are
+    normalized here so partial participation stays a proper average."""
+    total = float(sum(w for _, _, w in uploads))
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        leaves_prev, treedef = jax.tree.flatten(prev_master)
+        flat_prev = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                                     for x in leaves_prev])
+        cl, mk = [], []
+        for cp, cm, _ in uploads:
+            lc = jax.tree.leaves(cp)
+            lm = jax.tree.leaves(cm)
+            cl.append(jnp.concatenate(
+                [x.reshape(-1).astype(jnp.float32) for x in lc]))
+            mk.append(jnp.concatenate(
+                [jnp.broadcast_to(m, x.shape).reshape(-1).astype(jnp.float32)
+                 for m, x in zip(lm, lc)]))
+        ws = jnp.asarray([w / total for _, _, w in uploads], jnp.float32)
+        flat = kops.fill_aggregate(jnp.stack(cl), jnp.stack(mk), ws, flat_prev)
+        out, off = [], 0
+        for x in leaves_prev:
+            n = x.size
+            out.append(flat[off: off + n].reshape(x.shape).astype(x.dtype))
+            off += n
+        return jax.tree.unflatten(treedef, out)
+
+    clients = tuple(cp for cp, _, _ in uploads)
+    masks = tuple(cm for _, cm, _ in uploads)
+    weights = jnp.asarray([w / total for _, _, w in uploads], jnp.float32)
+    return _combine_jit(prev_master, clients, masks, weights)
+
+
+@jax.jit
+def _combine_jit(prev_master, clients, masks, weights):
+    def combine(prev, *cm_flat):
+        n = len(cm_flat) // 2
+        acc = jnp.zeros_like(prev, dtype=jnp.float32)
+        for i in range(n):
+            cp, m = cm_flat[i], cm_flat[n + i]
+            m = jnp.broadcast_to(m, prev.shape).astype(jnp.float32)
+            filled = (m * cp.astype(jnp.float32)
+                      + (1 - m) * prev.astype(jnp.float32))
+            acc = acc + weights[i] * filled
+        return acc.astype(prev.dtype)
+
+    return jax.tree.map(combine, prev_master, *clients, *masks)
+
+
+def fedavg(uploads: Sequence[Tuple[Params, float]]) -> Params:
+    """Plain FedAvg (Algorithm 1 line 9) — the paper's baseline aggregator."""
+    total = float(sum(w for _, w in uploads))
+    weights = jnp.asarray([w / total for _, w in uploads], jnp.float32)
+    return _fedavg_jit(tuple(p for p, _ in uploads), weights)
+
+
+@jax.jit
+def _fedavg_jit(clients, weights):
+    def avg(*xs):
+        acc = jnp.zeros_like(xs[0], dtype=jnp.float32)
+        for i, x in enumerate(xs):
+            acc = acc + weights[i] * x.astype(jnp.float32)
+        return acc.astype(xs[0].dtype)
+
+    return jax.tree.map(avg, *clients)

@@ -1,0 +1,43 @@
+"""Double-sampling (paper Section III.B, contribution 1).
+
+(a) model sampling — one choice key per individual samples a sub-network of
+    the master model;
+(b) client sampling — the m = C*K participating clients are partitioned
+    WITHOUT replacement into N groups of L = floor(m/N); group g trains the
+    sub-model of individual g, so every client trains exactly one sub-model
+    exactly once per generation.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import choice
+
+
+def sample_participants(rng: np.random.Generator, total_clients: int,
+                        participation: float) -> np.ndarray:
+    """Select m = C*K participating clients for this round."""
+    m = max(1, int(round(participation * total_clients)))
+    return rng.permutation(total_clients)[:m]
+
+
+def sample_client_groups(rng: np.random.Generator, participants: np.ndarray,
+                         n_individuals: int) -> List[np.ndarray]:
+    """Partition participants into N disjoint groups of L = floor(m/N).
+
+    Requires m >= N (paper assumes #clients >= population size).  Clients
+    beyond N*L idle this round, matching the floor in the paper.
+    """
+    m = len(participants)
+    if m < n_individuals:
+        raise ValueError(f"need >= {n_individuals} clients, got {m}")
+    l_per = m // n_individuals
+    perm = rng.permutation(participants)
+    return [perm[g * l_per:(g + 1) * l_per] for g in range(n_individuals)]
+
+
+def sample_population_keys(rng: np.random.Generator, n: int,
+                           num_blocks: int) -> List[np.ndarray]:
+    return [choice.random_key(rng, num_blocks) for _ in range(n)]

@@ -1,0 +1,86 @@
+"""Federated client/server primitives (Algorithm 1 + the client side of
+Algorithm 4): jit-compiled local SGD over pre-batched shards, weighted
+evaluation, and plain FedAvg rounds for the fixed-model baseline.
+
+The choice key is a *traced* int32 vector everywhere, so one compilation of
+the client update / evaluator serves every sub-model in the population —
+this is what makes the search real-time on the server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import fedavg
+from repro.core.supernet import SupernetAPI
+from repro.data.pipeline import ClientDataset
+from repro.optim import sgd_init, sgd_update
+
+Params = Any
+
+
+def make_client_update(api: SupernetAPI, epochs: int = 1,
+                       momentum: float = 0.5) -> Callable:
+    """Client k update (Algorithm 4 lines 57-68): E epochs of minibatch SGD
+    from the downloaded (weight-inherited) master, on the selected subnet."""
+
+    @jax.jit
+    def update(params: Params, key: jax.Array, xb, yb, lr):
+        vel = sgd_init(params)
+
+        def one_batch(carry, batch):
+            p, v = carry
+            x, y = batch
+            g = jax.grad(api.loss)(p, {"x": x, "y": y}, key)
+            p, v = sgd_update(p, g, v, lr, momentum)
+            return (p, v), None
+
+        def one_epoch(carry, _):
+            return jax.lax.scan(one_batch, carry, (xb, yb))[0], None
+
+        (params, _), _ = jax.lax.scan(one_epoch, (params, vel), None,
+                                      length=epochs)
+        return params
+
+    return update
+
+
+def make_evaluator(api: SupernetAPI) -> Callable:
+    """Test-error counter over a client's pre-batched test shard."""
+
+    @jax.jit
+    def evaluate(params: Params, key: jax.Array, xb, yb):
+        def one(acc, batch):
+            x, y = batch
+            return acc + api.error_count(params, {"x": x, "y": y}, key), None
+        errs, _ = jax.lax.scan(one, jnp.zeros((), jnp.int32), (xb, yb))
+        return errs
+
+    return evaluate
+
+
+def weighted_test_error(evaluate, params, key, clients: Sequence[ClientDataset]
+                        ) -> float:
+    """Paper Algorithm 4 line 49: weighted average of client test errors."""
+    wrong = total = 0
+    for c in clients:
+        xb, yb = c.test
+        wrong += int(evaluate(params, key, xb, yb))
+        total += xb.shape[0] * xb.shape[1]
+    return wrong / max(total, 1)
+
+
+def fedavg_round(update, params: Params, key: jax.Array,
+                 clients: Sequence[ClientDataset], lr) -> Params:
+    """One FedAvg round of the fixed-model baseline (all clients train the
+    same model; plain weighted averaging)."""
+    uploads = []
+    for c in clients:
+        xb, yb = c.train
+        p_k = update(params, key, xb, yb, lr)
+        uploads.append((p_k, c.weight))
+    return fedavg(uploads)

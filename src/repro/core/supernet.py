@@ -1,0 +1,114 @@
+"""Uniform supernet API over the two master-model families.
+
+The paper's runtime (rt_enas / offline_enas) is model-agnostic: it needs
+init / loss / error-rate / trained-mask / flops / payload as functions of a
+choice key.  ``cnn_supernet_api`` is the paper-faithful CIFAR master model;
+``lm_supernet_api`` is the transformer adaptation used with the assigned
+architectures (DESIGN.md Section 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aggregate, flops
+from repro.models import cnn
+from repro.models import transformer as tr
+from repro.models.layers import cross_entropy
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SupernetAPI:
+    cfg: ModelConfig
+    num_blocks: int
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, Dict, jax.Array], jax.Array]
+    error_count: Callable[[Params, Dict, jax.Array], jax.Array]
+    trained_mask: Callable[[Params, np.ndarray], Params]
+    flops: Callable[[np.ndarray], float]
+    payload_params: Callable[[np.ndarray], int]
+    master_params: Callable[[], int]
+
+
+def cnn_supernet_api(cfg: ModelConfig) -> SupernetAPI:
+    assert cfg.family == "cnn"
+
+    def init(rng):
+        return cnn.init_params(rng, cfg)
+
+    def loss(params, batch, key):
+        logits = cnn.forward(params, batch["x"], key)
+        onehot = jax.nn.one_hot(batch["y"], logits.shape[-1])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    def error_count(params, batch, key):
+        logits = cnn.forward(params, batch["x"], key)
+        return jnp.sum(jnp.argmax(logits, -1) != batch["y"])
+
+    # per-(block, branch) parameter sizes, computed once
+    _dummy = init(jax.random.PRNGKey(0))
+    _total = sum(x.size for x in jax.tree.leaves(_dummy))
+    _branch_sizes = [
+        {nm: sum(x.size for x in jax.tree.leaves(blk[nm])) for nm in blk}
+        for blk in _dummy["blocks"]
+    ]
+    _base = _total - sum(sum(b.values()) for b in _branch_sizes)
+
+    def _master_params():
+        return _total
+
+    def payload(key):
+        # shared stem/fc + only the selected branch of every choice block
+        from repro.models.cnn import BRANCH_NAMES
+        return _base + sum(_branch_sizes[i][BRANCH_NAMES[int(b)]]
+                           for i, b in enumerate(np.asarray(key)))
+
+    return SupernetAPI(
+        cfg=cfg, num_blocks=cfg.num_layers, init=init, loss=loss,
+        error_count=error_count,
+        trained_mask=aggregate.cnn_trained_mask,
+        flops=lambda key: float(flops.cnn_subnet_macs(key, cfg.num_layers)),
+        payload_params=payload, master_params=_master_params)
+
+
+def lm_supernet_api(cfg: ModelConfig) -> SupernetAPI:
+    assert cfg.supernet and cfg.family in ("dense", "moe", "ssm")
+
+    def init(rng):
+        return tr.init_params(rng, cfg)
+
+    def loss(params, batch, key):
+        logits, aux, _ = tr.forward(params, cfg, batch["x"], choice_key=key)
+        return cross_entropy(logits, batch["y"]) + 0.01 * aux
+
+    def error_count(params, batch, key):
+        logits, _, _ = tr.forward(params, cfg, batch["x"], choice_key=key)
+        return jnp.sum(jnp.argmax(logits, -1) != batch["y"])
+
+    def _master_params():
+        return (flops.model_params(cfg)
+                + 2 * cfg.num_layers * flops.layer_params(cfg))  # 3 branches
+
+    def subnet_flops(key):
+        # per-token fwd flops of the selected subnet (2 * params used)
+        return 2.0 * flops.subnet_params(cfg, key)
+
+    return SupernetAPI(
+        cfg=cfg, num_blocks=cfg.num_layers, init=init, loss=loss,
+        error_count=error_count,
+        trained_mask=aggregate.supernet_trained_mask,
+        flops=subnet_flops,
+        payload_params=lambda key: flops.subnet_params(cfg, key),
+        master_params=_master_params)
+
+
+def make_api(cfg: ModelConfig) -> SupernetAPI:
+    return cnn_supernet_api(cfg) if cfg.family == "cnn" else lm_supernet_api(cfg)

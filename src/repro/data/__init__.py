@@ -1,0 +1,9 @@
+from repro.data.partition import partition_dirichlet, partition_iid, partition_label
+from repro.data.pipeline import ClientDataset, batched, global_batches, make_clients
+from repro.data.synthetic import make_classification, make_lm_stream
+
+__all__ = [
+    "partition_dirichlet", "partition_iid", "partition_label",
+    "ClientDataset", "batched", "global_batches", "make_clients",
+    "make_classification", "make_lm_stream",
+]

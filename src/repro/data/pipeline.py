@@ -1,0 +1,60 @@
+"""Batching pipeline: shapes client shards into (num_batches, B, ...) arrays
+consumable by scan-based local training, plus an infinite global-batch
+iterator for the launcher's (non-federated) training path."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+
+def batched(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Shuffle and reshape to (nb, batch, ...); drops the ragged tail."""
+    rng = np.random.default_rng(seed)
+    n = (len(x) // batch) * batch
+    if n == 0:
+        raise ValueError(f"shard of {len(x)} < batch {batch}")
+    perm = rng.permutation(len(x))[:n]
+    xb = x[perm].reshape((n // batch, batch) + x.shape[1:])
+    yb = y[perm].reshape((n // batch, batch) + y.shape[1:])
+    return xb, yb
+
+
+class ClientDataset:
+    """One client's local train/test shards, pre-batched for lax.scan."""
+
+    def __init__(self, cid: int, x: np.ndarray, y: np.ndarray,
+                 batch: int, test_batch: int, test_frac: float = 0.2,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed + cid)
+        perm = rng.permutation(len(x))
+        n_test = max(test_batch, int(len(x) * test_frac))
+        n_test = (n_test // test_batch) * test_batch or test_batch
+        te, tr = perm[:n_test], perm[n_test:]
+        self.cid = cid
+        self.train = batched(x[tr], y[tr], batch, seed=seed + cid)
+        self.test = batched(x[te], y[te], test_batch, seed=seed + cid + 7)
+        self.n_train = len(tr)
+
+    @property
+    def weight(self) -> float:
+        return float(self.n_train)
+
+
+def make_clients(x: np.ndarray, y: np.ndarray, shards: List[np.ndarray],
+                 batch: int, test_batch: int, seed: int = 0
+                 ) -> List[ClientDataset]:
+    return [ClientDataset(i, x[s], y[s], batch, test_batch, seed=seed)
+            for i, s in enumerate(shards)]
+
+
+def global_batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0
+                   ) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    while True:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            s = perm[i:i + batch]
+            yield {"x": x[s], "y": y[s]}

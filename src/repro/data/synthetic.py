@@ -1,0 +1,45 @@
+"""Synthetic-but-learnable datasets.
+
+CIFAR-10 is not available in the offline container (DESIGN.md Section 8), so
+the federated experiments use a class-conditional image mixture with the
+same tensor shapes (32x32x3, 10 classes): each class owns a smooth random
+prototype field; samples are prototype + noise.  Difficulty is controlled
+by the signal/noise ratio, giving non-trivial but CPU-learnable tasks whose
+*relative* comparisons (RT vs offline, Pareto shape) mirror the paper's.
+
+LM streams for the transformer smoke/integration tests follow a noisy
+first-order Markov chain, so next-token prediction has learnable structure.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def make_classification(seed: int, n: int, image: int = 32, classes: int = 10,
+                        channels: int = 3, signal: float = 1.0,
+                        noise: float = 1.0) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    # smooth prototypes: low-res random fields upsampled (so conv nets with
+    # small receptive fields can pick up class structure)
+    low = rng.normal(size=(classes, 4, 4, channels))
+    reps = image // 4
+    protos = np.repeat(np.repeat(low, reps, axis=1), reps, axis=2)
+    y = rng.integers(0, classes, size=n)
+    x = protos[y] * signal + rng.normal(size=(n, image, image, channels)) * noise
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def make_lm_stream(seed: int, n_seqs: int, seq_len: int, vocab: int,
+                   order_noise: float = 0.1) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    nxt = rng.integers(0, vocab, size=vocab)          # deterministic successor
+    toks = np.empty((n_seqs, seq_len + 1), np.int64)
+    toks[:, 0] = rng.integers(0, vocab, size=n_seqs)
+    for t in range(seq_len):
+        follow = nxt[toks[:, t]]
+        rand = rng.integers(0, vocab, size=n_seqs)
+        use_rand = rng.random(n_seqs) < order_noise
+        toks[:, t + 1] = np.where(use_rand, rand, follow)
+    return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+kernels: flash_attention (attention hot spot), ssd_scan (Mamba2 chunk
+scan), fill_aggregate (paper Algorithm 3 server reduction), expert_gemm
+(MoE grouped matmul).  ``ops`` holds the jit wrappers, ``ref`` the
+pure-jnp oracles; per-kernel shape/dtype sweeps live in tests/.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

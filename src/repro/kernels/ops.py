@@ -1,0 +1,72 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU-only; interpret mode
+executes kernel bodies in Python for validation).  On real TPUs set
+``repro.kernels.ops.INTERPRET = False`` once at startup.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import expert_gemm as _eg
+from repro.kernels import fill_aggregate as _fa
+from repro.kernels import flash_attention as _flash
+from repro.kernels import ssd_scan as _ssd
+
+INTERPRET = True
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, H, D); k, v: (B, S, Kh, D) -> (B, S, H, D).
+
+    GQA K/V are repeated to the full head count here (broadcast; stays
+    sharded — see models/attention.py) and batch*heads fold into the
+    kernel's leading grid axis.
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = _flash.flash_attention(fold(q), fold(k), fold(v), causal=causal,
+                                 window=window, interpret=INTERPRET)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def ssd_scan(xs, a, bm, cm, initial_state=None):
+    """Oracle-layout adapter: xs (B, NC, Q, H, P); a (B, NC, Q, H);
+    bm, cm (B, NC, Q, N) -> (y (B, NC, Q, H, P), state (B, H, P, N))."""
+    x_k = jnp.moveaxis(xs, 3, 1)                 # (B, H, NC, Q, P)
+    a_k = jnp.moveaxis(a, 3, 1)                  # (B, H, NC, Q)
+    y, s = _ssd.ssd_scan(x_k, a_k, bm, cm, initial_state,
+                         interpret=INTERPRET)
+    return jnp.moveaxis(y, 1, 3), s
+
+
+@jax.jit
+def fill_aggregate(clients, masks, weights, prev):
+    """clients, masks: (m, P); weights: (m,); prev: (P,) -> (P,)."""
+    return _fa.fill_aggregate(clients, masks, weights, prev,
+                              interpret=INTERPRET)
+
+
+@jax.jit
+def expert_gemm(x, w):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    return _eg.expert_gemm(x, w, interpret=INTERPRET)
+
+
+@jax.jit
+def expert_ffn(experts, x):
+    """SwiGLU expert FFN on dispatched slots via the grouped-GEMM kernel.
+    x: (E, C, d) -> (E, C, d)."""
+    h = expert_gemm(x, experts["wi"])
+    g = expert_gemm(x, experts["wg"])
+    return expert_gemm(jax.nn.silu(g) * h, experts["wo"])

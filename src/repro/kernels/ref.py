@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the `assert_allclose` targets).
+
+These intentionally re-state the math in the most straightforward form —
+independent of the blocked/streamed kernel implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=0):
+    """q: (B, S, H, D); k, v: (B, S, Kh, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window:
+        mask = mask & (ki > qi - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan(xs, a, bm, cm):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    xs: (B, NC, Q, H, P) pre-scaled inputs; a: (B, NC, Q, H) log-decay;
+    bm, cm: (B, NC, Q, N).  Returns (y (B, NC, Q, H, P), state (B,H,P,N)).
+    """
+    b, nc, q, h, p = xs.shape
+    n = bm.shape[-1]
+    x_f = xs.reshape(b, nc * q, h, p).astype(jnp.float32)
+    a_f = a.reshape(b, nc * q, h).astype(jnp.float32)
+    b_f = bm.reshape(b, nc * q, n).astype(jnp.float32)
+    c_f = cm.reshape(b, nc * q, n).astype(jnp.float32)
+
+    def step(state, t):
+        x_t, a_t, b_t, c_t = t
+        state = (state * jnp.exp(a_t)[:, :, None, None]
+                 + jnp.einsum("bhp,bn->bhpn", x_t, b_t))
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs_t = (jnp.moveaxis(x_f, 1, 0), jnp.moveaxis(a_f, 1, 0),
+            jnp.moveaxis(b_f, 1, 0), jnp.moveaxis(c_f, 1, 0))
+    state, ys = jax.lax.scan(step, s0, xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc, q, h, p)
+    return y, state
+
+
+def fill_aggregate(clients, masks, weights, prev):
+    cl = clients.astype(jnp.float32)
+    mk = masks.astype(jnp.float32)
+    filled = mk * cl + (1 - mk) * prev.astype(jnp.float32)[None, :]
+    return jnp.einsum("m,mp->p", weights.astype(jnp.float32),
+                      filled).astype(prev.dtype)
+
+
+def expert_gemm(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

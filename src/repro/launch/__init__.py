@@ -1,0 +1,5 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS to 512 placeholder devices, which only the dry-run may do.
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

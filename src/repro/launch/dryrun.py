@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) this lowers + compiles the real step
+function (train_step / prefill_step / decode_step) against ShapeDtypeStruct
+inputs on the production mesh (16x16 single-pod, 2x16x16 multi-pod), prints
+memory_analysis() (proves it fits) and cost_analysis() (FLOPs/bytes for the
+roofline), parses collective bytes from the optimized HLO, and writes one
+JSON record per combination under benchmarks/results/.
+
+Measurement methodology (see EXPERIMENTS.md §Dry-run):
+  * the FULL-depth model compiles with scan-over-layers (the production
+    form) — this is the pass/fail gate and the memory_analysis source;
+  * XLA's HloCostAnalysis counts while-loop bodies ONCE (not x trip count),
+    so roofline FLOPs/bytes/collective-bytes come from a pair of shallow
+    UNROLLED compiles (depths L1 < L2 << L): per-layer slope
+    (f(L2)-f(L1))/(L2-L1) + intercept, extrapolated to the full depth.
+    Layers are structurally identical, so the extrapolation is exact up to
+    boundary fusion effects.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and only the dry-run may see 512
+placeholder devices.
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_ALIASES, SHAPES, get_config, get_shape
+from repro.core import flops as flops_mod
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch.sharding import batch_spec, cache_specs, param_specs
+from repro.launch.specs import (
+    abstract_cache, abstract_params, cache_len, effective_window, input_specs,
+)
+from repro.launch.train import init_opt, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+# train_4k microbatching so the big configs fit 16 GB/chip (activation
+# memory scales 1/microbatch; see EXPERIMENTS.md Perf log)
+DEFAULT_MICROBATCH = {
+    "deepseek-67b": 8,
+    "llama4-scout-17b-a16e": 4,
+    "whisper-large-v3": 4,
+    "chatglm3-6b": 2,
+    "starcoder2-3b": 2,
+    "zamba2-2.7b": 2,
+    "mamba2-780m": 4,
+    "granite-moe-1b-a400m": 2,
+}
+
+
+def _depth_pair(cfg) -> Tuple[int, int]:
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        return (k, 2 * k)          # keep the shared-attn period intact
+    return (4, 8)
+
+
+def _with_depth(cfg, depth: int):
+    kw = {"num_layers": depth}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = depth
+    return cfg.replace(**kw)
+
+
+def _compile_one(cfg, shape, mesh, *, unroll: bool, backend: str,
+                 remat: bool, fused_ce: bool, supernet: bool,
+                 microbatch: int = 1):
+    """Lower + compile one step function; returns (compiled, seconds)."""
+    window = effective_window(cfg, shape)
+    specs = input_specs(cfg, shape)
+    params = abstract_params(cfg)
+    p_specs = param_specs(mesh, params)
+    in_batch_specs = {k: batch_spec(mesh, shape.global_batch, len(v.shape))
+                      for k, v in specs.items()}
+    if supernet and shape.kind == "train":
+        specs["choice_key"] = jax.ShapeDtypeStruct((cfg.num_layers,),
+                                                   jnp.int32)
+        in_batch_specs["choice_key"] = P()
+
+    def sh(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    from repro.launch import policy
+    policy.set_mesh(mesh)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = jax.eval_shape(lambda p: init_opt(p), params)
+            o_specs = param_specs(mesh, opt)
+            step = make_train_step(cfg, window=window, backend=backend,
+                                   remat=remat, fused_ce=fused_ce,
+                                   unroll=unroll, microbatch=microbatch)
+            jf = jax.jit(step,
+                         in_shardings=sh((p_specs, o_specs, in_batch_specs)),
+                         out_shardings=sh((p_specs, o_specs, P())))
+            lowered = jf.lower(params, opt, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, window=window, backend=backend,
+                                     unroll=unroll)
+            jf = jax.jit(step,
+                         in_shardings=sh((p_specs, in_batch_specs)),
+                         out_shardings=sh(batch_spec(mesh,
+                                                     shape.global_batch, 3)))
+            lowered = jf.lower(params, specs)
+        else:  # decode
+            cache = abstract_cache(cfg, shape)
+            c_specs = cache_specs(mesh, cache, shape.global_batch)
+            step = make_decode_step(cfg, window=window, unroll=unroll)
+            # donate the cache: ring updates alias in place (production
+            # serving semantics; also removes full-cache copy traffic)
+            jf = jax.jit(step,
+                         in_shardings=sh((p_specs, c_specs, in_batch_specs)),
+                         out_shardings=sh((batch_spec(mesh,
+                                                      shape.global_batch, 3),
+                                           c_specs)),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params, cache, specs)
+        compiled = lowered.compile()
+    policy.set_mesh(None)
+    return compiled, time.time() - t0
+
+
+def _costs(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"], "coll_ops": coll["ops"],
+            "coll_by_kind": {k: coll[k] for k in rl.COLLECTIVE_KINDS}}
+
+
+def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
+            supernet: bool = False, backend: str = "xla",
+            remat: bool = True, fused_ce: bool = True,
+            roofline: bool = True, microbatch: int = 0,
+            verbose: bool = True,
+            extra_tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if supernet:
+        cfg = cfg.replace(supernet=True)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    if microbatch <= 0:
+        microbatch = DEFAULT_MICROBATCH.get(cfg.name, 1) \
+            if shape.kind == "train" else 1
+    kw = dict(backend=backend, remat=remat, fused_ce=fused_ce,
+              supernet=supernet, microbatch=microbatch)
+
+    # 1) full-depth, scan-over-layers: the compile gate + memory analysis
+    compiled, compile_s = _compile_one(cfg, shape, mesh, unroll=False, **kw)
+    mem = compiled.memory_analysis()
+
+    rec: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind, "window": effective_window(cfg, shape),
+        "supernet": supernet, "backend": backend, "remat": remat,
+        "fused_ce": fused_ce, "microbatch": microbatch, "tag": extra_tag,
+        "compile_s": round(compile_s, 1),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+
+    # 2) roofline terms: shallow unrolled depth pair -> per-layer slope.
+    # microbatch forced to 1 here: the microbatch accumulator is a while
+    # loop whose body HloCostAnalysis counts once, hiding a microbatch-
+    # factor of the arithmetic (the gate compile above keeps the real
+    # microbatching for the memory analysis).
+    if roofline:
+        rkw = dict(kw, microbatch=1)
+        l1, l2 = _depth_pair(cfg)
+        c1, _ = _compile_one(_with_depth(cfg, l1), shape, mesh,
+                             unroll=True, **rkw)
+        c2, _ = _compile_one(_with_depth(cfg, l2), shape, mesh,
+                             unroll=True, **rkw)
+        f1, f2 = _costs(c1), _costs(c2)
+        L = cfg.num_layers
+
+        def extrap(v1, v2):
+            slope = (v2 - v1) / (l2 - l1)
+            return max(v2 + slope * (L - l2), 0.0)
+
+        flops_dev = extrap(f1["flops"], f2["flops"])
+        bytes_dev = extrap(f1["bytes"], f2["bytes"])
+        coll_dev = extrap(f1["coll"], f2["coll"])
+        terms = rl.roofline_terms(flops_dev, bytes_dev, coll_dev)
+        coll_kind = {k: extrap(f1["coll_by_kind"][k], f2["coll_by_kind"][k])
+                     for k in rl.COLLECTIVE_KINDS}
+
+        if shape.kind == "train":
+            model_flops = flops_mod.train_flops(
+                cfg, shape.global_batch * shape.seq_len)
+        elif shape.kind == "prefill":
+            model_flops = flops_mod.train_flops(
+                cfg, shape.global_batch * shape.seq_len) / 3.0  # fwd only
+        else:
+            model_flops = flops_mod.decode_flops(cfg, shape.global_batch)
+
+        rec.update({
+            "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+            "collective_bytes_per_dev": coll_dev,
+            "collectives": coll_kind,
+            "model_flops_global": model_flops,
+            "useful_flops_ratio": (model_flops / (flops_dev * chips)
+                                   if flops_dev else 0.0),
+            "depth_pair": [l1, l2],
+            **terms,
+        })
+
+    if verbose:
+        print(f"== {cfg.name} x {shape_name} on {rec['mesh']} "
+              f"({chips} chips){' [supernet]' if supernet else ''}"
+              f"{' [' + extra_tag + ']' if extra_tag else ''}")
+        print(f"   full-depth compile {compile_s:.1f}s | "
+              f"args {rec.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+              f"temp {rec.get('temp_size_in_bytes', 0)/1e9:.2f}GB per dev")
+        if roofline:
+            print(f"   per-dev flops {flops_dev:.3e} bytes {bytes_dev:.3e} "
+                  f"coll {coll_dev:.3e}")
+            print(f"   roofline: compute {rec['compute_s']*1e3:.3f}ms "
+                  f"memory {rec['memory_s']*1e3:.3f}ms "
+                  f"collective {rec['collective_s']*1e3:.3f}ms "
+                  f"-> {rec['dominant']}-bound | "
+                  f"MODEL/HLO {rec['useful_flops_ratio']:.3f}")
+    return rec
+
+
+def save_record(rec: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    sup = "_supernet" if rec.get("supernet") else ""
+    name = (f"dryrun_{rec['arch'].replace('.', 'p')}_{rec['shape']}_"
+            f"{rec['mesh'].replace('x', '-')}{sup}{tag}.json")
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--supernet", action="store_true")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas", "chunked"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-fused-ce", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="compile gate only (skip the unrolled depth pair)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="0 = per-arch default")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save", action="store_true")
+    args = ap.parse_args()
+
+    archs = ([a for a in ARCH_ALIASES if a != "cifar-supernet"]
+             if args.arch == "all" else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = dry_run(arch, shape, multi_pod=mp,
+                                  supernet=args.supernet,
+                                  backend=args.backend,
+                                  remat=not args.no_remat,
+                                  fused_ce=not args.no_fused_ce,
+                                  roofline=not args.no_roofline,
+                                  microbatch=args.microbatch,
+                                  extra_tag=args.tag)
+                    if args.save:
+                        save_record(rec)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((arch, shape, mp, repr(e)[:400]))
+                    print(f"!! FAIL {arch} x {shape} multi_pod={mp}: "
+                          f"{repr(e)[:400]}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures")
+    print("ALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

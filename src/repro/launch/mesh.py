@@ -1,0 +1,35 @@
+"""Production mesh construction (TPU v5e fleet).
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, while tests and benches must keep seeing the single real device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1x1 mesh over the real local device(s) — used by the CPU
+    examples so the same pjit code paths run everywhere."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh: Mesh):
+    """Axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh: Mesh):
+    """Axes the parameter 'replicated' dim is FSDP-sharded over."""
+    return data_axes(mesh)

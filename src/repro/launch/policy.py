@@ -1,0 +1,32 @@
+"""Distribution policy context.
+
+The model code is mesh-agnostic; the launcher (dry-run / trainer / server)
+registers the active mesh here, and layers that have an explicitly-
+distributed implementation (shard_map expert-parallel MoE) pick it up.
+When no mesh is registered (CPU tests, single host) every layer uses its
+pure-GSPMD formulation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

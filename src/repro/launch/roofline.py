@@ -1,0 +1,87 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``cost_analysis`` FLOPs/bytes from the post-SPMD module
+are PER-DEVICE quantities (verified in tests/test_dryrun.py), so the
+roofline terms divide only collective bytes by the chip count where the
+parse is of per-device programs too; see ``roofline_terms``.
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and
+sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    count: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.-]+\s*=\s*[^=]*?\b"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        kind, phase = m.group(1), m.group(2)
+        if phase == "-done":
+            continue  # counted at -start
+        # Optimized HLO does not always annotate operand types, so take the
+        # larger of (result-side, operand-side) shape sums as the per-device
+        # data volume of the op.  metadata/replica_groups never match the
+        # dtype[dims] pattern.
+        lhs_b = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(line[: m.end()]))
+        rhs_b = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(line[m.end():]))
+        out[kind] += max(lhs_b, rhs_b)
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS)
+    out["ops"] = float(sum(count.values()))
+    return out
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_collective_bytes: float,
+                   ici_links: int = 4) -> Dict[str, float]:
+    """Three roofline terms in seconds (per step, per chip).
+
+    All inputs are per-device quantities (post-SPMD module).  ``ici_links``
+    is the number of ICI links a v5e chip drives concurrently on a 2D torus
+    (4: +-x, +-y).
+    """
+    compute = per_device_flops / PEAK_FLOPS
+    memory = per_device_bytes / HBM_BW
+    collective = per_device_collective_bytes / (ICI_BW * ici_links)
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant}

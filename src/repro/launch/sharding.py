@@ -1,0 +1,167 @@
+"""Sharding policy: megatron tensor-parallel + FSDP hybrid.
+
+Rules are path-based over the parameter pytree; every rule degrades to
+replication when a dimension is not divisible by the mesh axis (e.g. odd
+vocab sizes like whisper's 51866 cannot shard over model=16, so the
+embedding flips to sharding d_model instead).
+
+Layout summary (2D logical mesh: data ~ fsdp axis, model ~ tensor axis):
+  embed (V, d)           -> (model, fsdp)  [or (fsdp, model) if V % model]
+  attn wq/wk/wv (d, Hh)  -> (fsdp, model);  wo (Hh, d) -> (model, fsdp)
+  mlp wi/wg (d, f)       -> (fsdp, model);  wo (f, d)  -> (model, fsdp)
+  moe experts (E, d, f)  -> (model=expert-parallel, fsdp, -)
+  ssm in_proj (d, x)     -> (fsdp, model);  out_proj   -> (model, fsdp)
+  norms / scalars        -> replicated
+Stacked (L, ...) / supernet (L, B, ...) leading axes are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+Params = Any
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, dim: int, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def _guarded(mesh: Mesh, shape: Sequence[int], spec: Sequence) -> P:
+    """Replicate any dim that does not divide its assigned axis."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        out.append(axis if (axis is not None and _fits(mesh, dim, axis))
+                   else None)
+    return P(*out)
+
+
+def param_spec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+    """PartitionSpec for one parameter leaf, identified by its '/' path."""
+    fsdp = data_axes(mesh)          # ("pod","data") or ("data",)
+    ndim = len(shape)
+
+    def base(spec2d):
+        """Right-align a trailing-dims spec; leading (L, branch) dims
+        replicate."""
+        pad = [None] * (ndim - len(spec2d))
+        return _guarded(mesh, shape, pad + list(spec2d))
+
+    name = path.split("/")[-1]
+    if "embed" in path and name == "table":
+        if _fits(mesh, shape[0], "model"):
+            return base(["model", fsdp])
+        # odd vocab (whisper 51866, granite 49155, ...): sharding d_model
+        # over 'model' instead trips an SPMD-partitioner bug in the gather's
+        # jvp inside the microbatch loop (invalid dynamic-slice); these
+        # tables are all < 300 MB — replicate them.
+        return base([None, fsdp])
+    if "experts" in path:
+        if name in ("wi", "wg"):
+            return base(["model", fsdp, None])
+        if name == "wo":
+            return base(["model", None, fsdp])
+    if "router" in path:
+        return base([None, None])
+    if name == "w":
+        parent = path.split("/")[-2]
+        if parent in ("wq", "wk", "wv", "wi", "wg", "in_proj", "proj"):
+            return base([fsdp, "model"])
+        if parent in ("wo", "out_proj"):
+            return base(["model", fsdp])
+        if parent.startswith(("z_proj", "x_proj", "b_proj", "c_proj",
+                              "dt_proj")):
+            return base([fsdp, "model"])
+        if parent.startswith("conv"):
+            return base([None, "model"])
+        if parent == "fc":
+            return base([None, None])
+    if name == "b":
+        parent = path.split("/")[-2]
+        if parent in ("wq", "wk", "wv", "wi", "wg", "in_proj") or \
+                parent.startswith(("conv", "z_proj", "x_proj", "b_proj",
+                                   "c_proj", "dt_proj")):
+            return base(["model"])
+        return base([None])
+    # conv_w, A_log, dt_bias, D, norms, scalars -> replicated
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    import re
+    return "/".join(re.sub(r"[\[\]'.]", "", str(p)) for p in path)
+
+
+def param_specs(mesh: Mesh, params: Params) -> Params:
+    """Tree of PartitionSpecs matching ``params`` (works on
+    ShapeDtypeStructs — no allocation needed)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_spec(mesh, _path_str(p), leaf.shape) for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(mesh: Mesh, params: Params) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    """Shard the leading batch dim over the data axes when divisible."""
+    fsdp = data_axes(mesh)
+    lead = fsdp if batch_size % _axis_size(mesh, fsdp) == 0 else None
+    return P(*([lead] + [None] * (ndim - 1)))
+
+
+def cache_spec(mesh: Mesh, path: str, shape: Sequence[int],
+               batch: int) -> P:
+    """KV/SSM cache sharding: batch over data when divisible, the cache
+    sequence dim (kv ring) over model; SSM state heads over model."""
+    fsdp = data_axes(mesh)
+    name = path.split("/")[-1]
+    bdim = fsdp if batch % _axis_size(mesh, fsdp) == 0 else None
+    ndim = len(shape)
+    if name in ("k", "v", "cross_k", "cross_v"):
+        # (..., B, C, Kh, hd).  Prefer sharding head_dim over 'model': the
+        # ring-buffer write (dynamic-update-slice at a traced slot) is then
+        # shard-local.  Sharding the cache-length dim instead makes GSPMD
+        # reshard the whole cache around every update (measured ~26 GB of
+        # collectives per decoded token for granite decode_32k).
+        if _fits(mesh, shape[-1], "model"):
+            spec = [None] * (ndim - 4) + [bdim, None, None, "model"]
+        else:
+            spec = [None] * (ndim - 4) + [bdim, "model", None, None]
+        return _guarded(mesh, shape, spec)
+    if name == "state":
+        # (..., B, H, P, N)
+        spec = [None] * (ndim - 4) + [bdim, "model", None, None]
+        return _guarded(mesh, shape, spec)
+    if name.startswith("conv"):
+        # (..., B, K-1, C)
+        spec = [None] * (ndim - 3) + [bdim, None, "model"]
+        return _guarded(mesh, shape, spec)
+    return P(*([None] * ndim))
+
+
+def cache_specs(mesh: Mesh, cache: Params, batch: int) -> Params:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [cache_spec(mesh, _path_str(p), leaf.shape, batch)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tr
+
+SDS = jax.ShapeDtypeStruct
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k forces the sliding-window attention variant for every
+    attention-bearing arch (DESIGN.md Section 4); other shapes use full
+    attention."""
+    return cfg.sliding_window if shape.sliding else 0
+
+
+def cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    w = effective_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Step-function inputs for (arch x shape), ShapeDtypeStruct only."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def prefix_spec():
+        if cfg.family in ("vlm", "audio"):
+            return SDS((b, cfg.num_prefix, cfg.d_model), cfg.jdtype)
+        return None
+
+    if shape.kind == "train":
+        out = {"tokens": SDS((b, s), i32), "labels": SDS((b, s), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": SDS((b, s), i32)}
+    else:  # decode: ONE new token against a seq_len-deep cache
+        out = {"token": SDS((b, 1), i32)}
+    p = prefix_spec()
+    if p is not None and shape.kind != "decode":
+        out["prefix"] = p
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: tr.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape) -> Any:
+    b = shape.global_batch
+    cl = cache_len(cfg, shape)
+    enc_len = cfg.num_prefix if cfg.family == "audio" else 0
+    return jax.eval_shape(
+        lambda: tr.init_cache(abstract_params(cfg), cfg, b, cl,
+                              enc_len=enc_len))

@@ -1,0 +1,3 @@
+from repro.models import attention, cnn, layers, moe, ssm, transformer
+
+__all__ = ["attention", "cnn", "layers", "moe", "ssm", "transformer"]

@@ -1,0 +1,296 @@
+"""Grouped-query attention for every transformer family in the zoo.
+
+Supports: GQA (num_kv_heads <= num_heads), RoPE 1d / 2d(chatglm half-dim) /
+none, optional QKV bias, causal or sliding-window masks, cross-attention
+(whisper), single-token decode against a (ring-buffered) KV cache, and a
+per-head mask used by the supernet 'lite' branch.
+
+The softmax(QK^T)V core can be routed to the Pallas flash-attention kernel
+(``backend='pallas'``) or to the pure-XLA einsum path (default; also the
+reference oracle for the kernel).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim, dtype,
+                   qkv_bias=False, cross=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype, qkv_bias),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype, qkv_bias),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype, qkv_bias),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+    return p
+
+
+def _split_heads(x, n):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _attend(q, k, v, mask, head_mask=None):
+    """q:(B,S,H,D) k,v:(B,T,Kh,D) mask:(B|1,S,T) bool -> (B,S,H*D).
+
+    GQA is handled by repeating K/V to the full head count rather than
+    reshaping Q to (Kh, G, D): splitting the head axis breaks tensor-
+    parallel sharding whenever Kh or G alone does not divide the model
+    axis (deepseek: Kh=8, G=8 on a 16-way axis replicated every score
+    tensor — ~5 GB/layer/device at train_4k).  The repeat is a broadcast
+    that stays sharded over the full H.
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    if head_mask is not None:
+        out = out * head_mask.astype(out.dtype)[None, None, :, None]
+    return out.reshape(b, s, h * d).astype(v.dtype)
+
+
+def _attend_chunked(q, k, v, *, causal=True, window=0, chunk=512,
+                    head_mask=None):
+    """Flash-style attention in pure XLA: scan over query blocks so only a
+    (chunk x T) score tile is live at once (vs the full (S x T) tensor of
+    ``_attend``); each tile is rematerialized in the backward pass.
+
+    At prefill_32k scale the full fp32 scores are ~8.6 GB/device/layer —
+    this caps them at chunk/S of that.  K/V must already be repeated to
+    full heads.  q: (B, S, H, D); k, v: (B, T, Kh, D).
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (s + pad) // chunk
+    qs = q.reshape(b, nq, chunk, h, d)
+    t_len = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k_pos = jnp.arange(t_len)
+
+    @jax.checkpoint
+    def block(qc, ci):
+        q_pos = ci * chunk + jnp.arange(chunk) + (t_len - s - pad)
+        m = jnp.ones((chunk, t_len), dtype=bool)
+        if causal:
+            m = m & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        # K/V stay in model dtype (they are re-read once per q-chunk —
+        # casting them fp32 up front doubles the streamed bytes); the MXU
+        # accumulates in fp32 via preferred_element_type.
+        sc = jnp.einsum("bchd,bthd->bhct", qc, k,
+                        preferred_element_type=jnp.float32) * scale
+        sc = jnp.where(m[None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bhct,bthd->bchd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    def body(_, xs):
+        qc, ci = xs
+        return None, block(qc, ci)
+
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qs, 1, 0),
+                           jnp.arange(nq, dtype=jnp.int32)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s + pad, h, d)[:, :s]
+    if head_mask is not None:
+        out = out * head_mask.astype(out.dtype)[None, None, :, None]
+    return out.reshape(b, s, h * d).astype(v.dtype)
+
+
+def causal_mask(s, t=None, window=0):
+    t = t or s
+    qi = jnp.arange(s)[:, None] + (t - s)
+    ki = jnp.arange(t)[None, :]
+    m = ki <= qi
+    if window:
+        m = m & (ki > qi - window)
+    return m[None]
+
+
+def _maybe_shard_kv_seq(k, v, num_heads):
+    """When the head count does not divide the model axis (whisper: 20,
+    internvl: 14 on a 16-way axis) GSPMD replicates the attention scores
+    over the whole model axis — measured 6.4x temp-memory blowup at
+    train_4k.  Constrain K/V to shard the kv-sequence dim over 'model'
+    instead; XLA then computes partial softmax + all-reduce (flash-decode
+    style)."""
+    from repro.launch import policy
+    mesh = policy.get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return k, v
+    m = mesh.shape["model"]
+    if num_heads % m == 0 or k.shape[1] % m != 0:
+        return k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = dax if k.shape[0] % policy.data_axis_size(mesh) == 0 else None
+    sh = NamedSharding(mesh, P(bspec, "model", None, None))
+    return (jax.lax.with_sharding_constraint(k, sh),
+            jax.lax.with_sharding_constraint(v, sh))
+
+
+def self_attention(p, x, positions, *, num_heads, num_kv_heads, head_dim,
+                   rope_style="1d", theta=10000.0, causal=True, window=0,
+                   head_mask=None, backend="xla"):
+    """Full-sequence self attention (train / prefill)."""
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    k = _split_heads(dense(p["wk"], x), num_kv_heads)
+    v = _split_heads(dense(p["wv"], x), num_kv_heads)
+    q = apply_rope(q, positions, theta, rope_style)
+    k = apply_rope(k, positions, theta, rope_style)
+    k, v = _maybe_shard_kv_seq(k, v, num_heads)
+    s = x.shape[1]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+        b = x.shape[0]
+        if head_mask is not None:
+            out = out * head_mask.astype(out.dtype)[None, None, :, None]
+        out = out.reshape(b, s, num_heads * head_dim)
+    elif backend == "chunked":
+        out = _attend_chunked(q, k, v, causal=causal, window=window,
+                              head_mask=head_mask)
+    else:
+        mask = causal_mask(s, window=window) if causal else \
+            jnp.ones((1, s, s), dtype=bool)
+        out = _attend(q, k, v, mask, head_mask)
+    return dense(p["wo"], out)
+
+
+def cross_attention(p, x, enc_kv, *, num_heads, num_kv_heads, head_dim,
+                    head_mask=None):
+    """Decoder->encoder attention.  ``enc_kv`` = (k, v) precomputed from the
+    encoder output, each (B, T_enc, Kh, D)."""
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    k, v = enc_kv
+    mask = jnp.ones((1, x.shape[1], k.shape[1]), dtype=bool)
+    out = _attend(q, k, v, mask, head_mask)
+    return dense(p["wo"], out)
+
+
+def encode_kv(p, enc_out, *, num_kv_heads):
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    k = _split_heads(dense(p["wk"], enc_out), num_kv_heads)
+    v = _split_heads(dense(p["wv"], enc_out), num_kv_heads)
+    return k, v
+
+
+def init_cache(batch, num_kv_heads, head_dim, cache_len, dtype):
+    """KV cache for one layer.  ``pos`` holds the absolute position stored in
+    each slot (-1 = empty) so the same code serves both a full cache and a
+    sliding-window ring buffer."""
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def _hd_sharding(x, batch):
+    """NamedSharding pinning the last (head_dim) axis to 'model' — the
+    decode cache's stored layout.  None when no mesh / not divisible."""
+    from repro.launch import policy
+    mesh = policy.get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    if x.shape[-1] % mesh.shape["model"] != 0:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = dax if batch % policy.data_axis_size(mesh) == 0 else None
+    return NamedSharding(
+        mesh, P(bspec, *([None] * (x.ndim - 2)), "model"))
+
+
+def decode_self_attention(p, x, cache, t, *, num_heads, num_kv_heads,
+                          head_dim, rope_style="1d", theta=10000.0, window=0,
+                          head_mask=None):
+    """One-token decode.  x: (B, 1, d); t: scalar int32 absolute position.
+    Writes slot ``t % cache_len`` (a ring buffer when cache_len < seq_len).
+
+    Q/K/V and the updated cache are pinned to the cache's stored layout
+    (head_dim sharded over 'model'): the ring write is then shard-local and
+    the score einsum contracts the sharded head_dim into a tiny psum —
+    without the pin GSPMD re-shards the entire multi-GB cache around every
+    update (EXPERIMENTS.md §Perf, hillclimb B).
+    """
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    k = _split_heads(dense(p["wk"], x), num_kv_heads)
+    v = _split_heads(dense(p["wv"], x), num_kv_heads)
+    pos = jnp.full((x.shape[0], 1), t, jnp.int32)
+    q = apply_rope(q, pos, theta, rope_style)
+    k = apply_rope(k, pos, theta, rope_style)
+    sh = _hd_sharding(q, q.shape[0])
+    if sh is not None:
+        q = jax.lax.with_sharding_constraint(q, sh)
+        k = jax.lax.with_sharding_constraint(k, sh)
+        v = jax.lax.with_sharding_constraint(v, sh)
+    cache_len = cache["k"].shape[1]
+    slot = jnp.mod(t, cache_len)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if sh is not None:
+        ck = jax.lax.with_sharding_constraint(ck, sh)
+        cv = jax.lax.with_sharding_constraint(cv, sh)
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.reshape(t, (1,)).astype(jnp.int32), (slot,))
+    valid = (cpos >= 0) & (cpos <= t)
+    if window:
+        valid = valid & (cpos > t - window)
+    mask = valid[None, None, :]
+    if sh is not None:
+        out = _attend_decode_pinned(q, ck, cv, mask, head_mask, sh)
+    else:
+        out = _attend(q, ck, cv, mask, head_mask)
+    out = dense(p["wo"], out)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _attend_decode_pinned(q, k, v, mask, head_mask, hd_sh):
+    """Decode attention that never re-shards the cache: the score einsum
+    contracts the model-sharded head_dim (psum of a tiny (B,H,1,T) tensor),
+    probs are pinned replicated-over-model, and the probs x V einsum reads
+    V in its stored bf16 hd-sharded layout.  Without the pins GSPMD
+    all-gathers the fp32-upcast V cache every layer (hillclimb B3)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    rep = NamedSharding(hd_sh.mesh, P(hd_sh.spec[0], None, None, None))
+    scores = jax.lax.with_sharding_constraint(scores, rep)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jax.lax.with_sharding_constraint(probs, rep)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = jax.lax.with_sharding_constraint(out, hd_sh)
+    if head_mask is not None:
+        out = out * head_mask.astype(out.dtype)[None, None, :, None]
+    return out.reshape(b, s, h * d).astype(v.dtype)

@@ -1,0 +1,201 @@
+"""Primitive layers shared by every model family (pure functional JAX).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every layer is a
+pair of ``init_*`` / ``apply`` functions.  Models stack per-layer params on a
+leading axis and scan over them, so compile time is depth-independent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype=jnp.float32, minval=-scale,
+                              maxval=scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, with_bias=False):
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": uniform_init(key, (d_in, d_out), scale, dtype)}
+    if with_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms.  RMSNorm everywhere (no running statistics): this is the TPU-native
+# application of the paper's observation that BN statistics diverge under
+# weight sharing + federated averaging (DESIGN.md Section 3).
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["g"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d, dtype):
+    return {"table": uniform_init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    # tied-weights unembedding: logits over vocab
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+def sinusoidal_positions(seq_len, d, dtype=jnp.float32, offset=0):
+    """Whisper-style sinusoidal position embeddings.  ``offset`` may be a
+    traced scalar (decode step at position t)."""
+    pos = (jnp.arange(seq_len, dtype=jnp.float32)
+           + jnp.asarray(offset, jnp.float32))[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / d)
+    ang = pos * inv
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (1D llama-style and 2D/half-dim chatglm-style)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0, style="1d"):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if style == "1d" else hd // 2   # chatglm rotates only half
+    freqs = rope_freqs(rot, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rot == hd:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) and plain GELU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, d_model, d_ff, dtype),
+         "wo": dense_init(k2, d_ff, d_model, dtype)}
+    if gated:
+        p["wg"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, ff_mask: Optional[jax.Array] = None):
+    """SwiGLU if 'wg' present else GELU.  ``ff_mask`` (d_ff,) optionally
+    zeroes hidden units — used by the supernet 'bottleneck' branch."""
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        h = jax.nn.silu(dense(p["wg"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    if ff_mask is not None:
+        h = h * ff_mask.astype(h.dtype)
+    return dense(p["wo"], h)
+
+
+def cross_entropy(logits, labels, ignore_id=-1):
+    """Mean token cross-entropy in fp32; labels==ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore_id)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def fused_cross_entropy(h, table, labels, ignore_id=-1, chunk=8192):
+    """Unembed + cross-entropy fused over token chunks.
+
+    Never materializes the full (B, S, V) fp32 logits: each chunk's logits
+    are computed, reduced to (logsumexp, gold) scalars per token, and
+    *recomputed* in the backward pass (jax.checkpoint).  At train_4k scale
+    on the production mesh the naive path's logits are the dominant
+    activation (e.g. qwen1.5: 1M tokens x 152k vocab x 4B = 617 GB global);
+    this path caps the live logits at chunk x V.
+
+    h: (B, S, d); table: (V, d); labels: (B, S).
+    """
+    b, s, d = h.shape
+    t = b * s
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    x = h.reshape(t, d)
+    y = labels.reshape(t)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=ignore_id)
+    x = x.reshape(n_chunks, chunk, d)
+    y = y.reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def chunk_nll(xc, yc):
+        logits = jnp.einsum("td,vd->tv", xc, table).astype(jnp.float32)
+        mask = yc != ignore_id
+        safe = jnp.where(mask, yc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xy):
+        nll, cnt = chunk_nll(*xy)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                 (x, y))
+    return nll / jnp.maximum(cnt, 1)

@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Follows the minimal SSD formulation of arXiv:2405.21060: the sequence is
+processed in chunks; within a chunk the recurrence is materialized as a
+(Q x Q) semiseparable attention-like matmul (MXU friendly), across chunks a
+tiny ``lax.scan`` carries the (H, P, N) state.  The chunk computation is the
+``ssd_scan`` Pallas kernel's target; this module doubles as its oracle.
+
+Projections are SEPARATE dense layers (z/x/B/C/dt) rather than one fused
+in_proj: slicing a tensor-parallel-sharded fused projection at non-shard-
+aligned offsets (di, di+n, ...) forces GSPMD to re-replicate the full
+activation on every layer — measured at ~1.3 GB/layer/device at train_4k
+scale before the split (EXPERIMENTS.md §Perf).
+
+Decode is the O(1) recurrent update: S <- exp(dt*A) S + dt * B (x) x.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init, uniform_init
+
+CHUNK = 128
+
+
+def ssm_init(key, cfg):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 9)
+    cw = 1.0 / math.sqrt(cfg.ssm_conv)
+    return {
+        "z_proj": dense_init(ks[0], d, di, cfg.jdtype),
+        "x_proj": dense_init(ks[1], d, di, cfg.jdtype),
+        "b_proj": dense_init(ks[2], d, n, cfg.jdtype),
+        "c_proj": dense_init(ks[3], d, n, cfg.jdtype),
+        "dt_proj": dense_init(ks[4], d, h, cfg.jdtype),
+        "conv_x": {"w": uniform_init(ks[5], (cfg.ssm_conv, di), cw, cfg.jdtype),
+                   "b": jnp.zeros((di,), cfg.jdtype)},
+        "conv_b": {"w": uniform_init(ks[6], (cfg.ssm_conv, n), cw, cfg.jdtype),
+                   "b": jnp.zeros((n,), cfg.jdtype)},
+        "conv_c": {"w": uniform_init(ks[7], (cfg.ssm_conv, n), cw, cfg.jdtype),
+                   "b": jnp.zeros((n,), cfg.jdtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, cfg.jdtype),
+        "out_proj": dense_init(ks[8], di, d, cfg.jdtype),
+    }
+
+
+def _causal_conv(x, conv):
+    """Depthwise causal conv over seq as K shifted adds.  x: (B, S, C)."""
+    w, b = conv["w"], conv["b"]
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = None
+    for i in range(k):
+        piece = pad[:, i: i + s, :] * w[i]
+        out = piece if out is None else out + piece
+    return jax.nn.silu(out + b)
+
+
+def segsum(a):
+    """log-space segment sums: out[..., i, j] = sum_{j<m<=i} a[..., m].
+    a: (..., Q) -> (..., Q, Q), lower-triangular valid."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_head, b_mat, c_mat, chunk=CHUNK,
+                initial_state=None, backend="xla"):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) raw head inputs;  dt: (B, S, H) (already softplus'd);
+    a_head: (H,) negative decay;  b_mat, c_mat: (B, S, N) (single group).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # zero-pad: dt=0 on padded steps => decay exp(0)=1 and no input
+        # contribution, so the recurrent state is unaffected
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xs = (x * dt[..., None]).reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    a = (dt * a_head[None, None, :]).reshape(bsz, nc, chunk, h)  # log decay
+    bm = b_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cm = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        y, final = kops.ssd_scan(xs, a, bm, cm, initial_state)
+        y = y.reshape(bsz, s, h, p)[:, :s_orig]
+        return y.astype(x.dtype), final
+
+    a_cum = jnp.cumsum(a, axis=2)                        # (b, c, q, h)
+    # 1) intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(segsum(jnp.moveaxis(a, -1, -2)))     # (b, c, h, q, q)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", cm, bm, l_mat, xs)
+    # 2) per-chunk final states
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b, c, q, h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bm, decay_states, xs)
+    # 3) inter-chunk recurrence (tiny scan over chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])            # (b, c, h)
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry   # emit the state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b, c, h, p, n)
+    # 4) state -> output within each chunk
+    state_decay = jnp.exp(a_cum)                         # (b, c, q, h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cm, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(p, x, cfg, *, state_mask=None, head_mask=None,
+                backend="xla"):
+    """Full-sequence Mamba2 block.  x: (B, S, d) -> (B, S, d).
+    ``state_mask`` (N,) / ``head_mask`` (H,) are supernet branch masks."""
+    bsz, s, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = dense(p["z_proj"], x)
+    x_in = _causal_conv(dense(p["x_proj"], x), p["conv_x"])
+    b_mat = _causal_conv(dense(p["b_proj"], x), p["conv_b"])
+    c_mat = _causal_conv(dense(p["c_proj"], x), p["conv_c"])
+    dt = dense(p["dt_proj"], x)
+    x_in = x_in.reshape(bsz, s, h, pd)
+    if state_mask is not None:
+        b_mat = b_mat * state_mask.astype(b_mat.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x_in, dt, a_head, b_mat, c_mat, backend=backend)
+    y = y + x_in.astype(jnp.float32) * p["D"][None, None, :, None]
+    if head_mask is not None:
+        y = y * head_mask.astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    return dense(p["out_proj"], y)
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    k = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, di), dtype),
+        "conv_b": jnp.zeros((batch, k, n), dtype),
+        "conv_c": jnp.zeros((batch, k, n), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                           jnp.float32),
+    }
+
+
+def _conv_step(buf, xt, conv):
+    """One-token depthwise conv against the rolling buffer.
+    buf: (B, K-1, C), xt: (B, C) -> (out (B, C), new buf)."""
+    w, b = conv["w"], conv["b"]
+    full = jnp.concatenate([buf, xt[:, None, :]], axis=1)   # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", full, w) + b
+    return jax.nn.silu(out), full[:, 1:, :]
+
+
+def ssm_decode_step(p, x, cache, cfg, *, state_mask=None, head_mask=None):
+    """One-token recurrent update.  x: (B, 1, d)."""
+    bsz = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x0 = x[:, 0]
+    z = dense(p["z_proj"], x0)
+    xt, new_cx = _conv_step(cache["conv_x"], dense(p["x_proj"], x0),
+                            p["conv_x"])
+    bt, new_cb = _conv_step(cache["conv_b"], dense(p["b_proj"], x0),
+                            p["conv_b"])
+    ct, new_cc = _conv_step(cache["conv_c"], dense(p["c_proj"], x0),
+                            p["conv_c"])
+    dt = dense(p["dt_proj"], x0)
+    x_in = xt.reshape(bsz, h, pd)
+    if state_mask is not None:
+        bt = bt * state_mask.astype(bt.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    a_head = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a_head[None, :])                # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x_in.astype(jnp.float32),
+                     bt.astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), state)
+    y = y + x_in.astype(jnp.float32) * p["D"][None, :, None]
+    if head_mask is not None:
+        y = y * head_mask.astype(y.dtype)[None, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    out = dense(p["out_proj"], y)[:, None, :]
+    return out, {"conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc,
+                 "state": state}

@@ -1,0 +1,484 @@
+"""Transformer / SSM / hybrid / MoE / enc-dec stacks with scan-over-layers.
+
+All families share one parameter layout convention: per-layer params are
+stacked on a leading ``L`` axis (plus a branch axis ``(L, 3, ...)`` when the
+paper's supernet is enabled) and the stack is traversed with ``lax.scan`` so
+compile time and HLO size are depth-independent — a requirement for the
+95-layer deepseek dry-run on 512 devices.
+
+The supernet follows the paper's choice-block semantics adapted to
+transformers (DESIGN.md Section 3): per layer, 4 branches
+  0: identity (layer skip)          1: full block
+  2: bottleneck (d_ff masked to /2) 3: lite (half the query heads masked)
+selected by a traced int32 choice key => the server never recompiles as the
+population moves through the search space.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense, dense_init, embed, embedding_init, mlp, mlp_init, rmsnorm,
+    rmsnorm_init, sinusoidal_positions, unembed,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Branch masks for the supernet (static per config)
+# ---------------------------------------------------------------------------
+
+def branch_masks(cfg: ModelConfig) -> Dict[str, jax.Array]:
+    m: Dict[str, jax.Array] = {}
+    if cfg.d_ff:
+        ff = jnp.arange(cfg.d_ff) < cfg.d_ff // 2
+        m["ff"] = ff
+    if cfg.num_heads:
+        m["head"] = jnp.arange(cfg.num_heads) < cfg.num_heads // 2
+    if cfg.num_experts:
+        f = cfg.moe_d_ff or cfg.d_ff
+        m["moe_ff"] = jnp.arange(f) < f // 2
+    if cfg.ssm_state:
+        m["state"] = jnp.arange(cfg.ssm_state) < cfg.ssm_state // 2
+        m["ssm_head"] = jnp.arange(cfg.ssm_heads) < cfg.ssm_heads // 2
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Per-layer parameter init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg, cross=False):
+    return attn.attention_init(key, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.hd, cfg.jdtype,
+                               qkv_bias=cfg.qkv_bias and not cross)
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.jdtype
+    if kind == "dense":
+        return {"ln1": rmsnorm_init(d, dt), "attn": _attn_init(ks[0], cfg),
+                "ln2": rmsnorm_init(d, dt),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, dt)}
+    if kind == "moe":
+        from repro.models.moe import moe_init
+        return {"ln1": rmsnorm_init(d, dt), "attn": _attn_init(ks[0], cfg),
+                "ln2": rmsnorm_init(d, dt), "moe": moe_init(ks[1], cfg)}
+    if kind == "ssm":
+        return {"ln": rmsnorm_init(d, dt), "ssm": ssm_mod.ssm_init(ks[0], cfg)}
+    if kind == "enc":
+        return {"ln1": rmsnorm_init(d, dt), "attn": _attn_init(ks[0], cfg),
+                "ln2": rmsnorm_init(d, dt),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, dt, gated=False)}
+    if kind == "encdec":
+        return {"ln1": rmsnorm_init(d, dt), "attn": _attn_init(ks[0], cfg),
+                "lnx": rmsnorm_init(d, dt),
+                "xattn": _attn_init(ks[1], cfg, cross=True),
+                "ln2": rmsnorm_init(d, dt),
+                "mlp": mlp_init(ks[2], d, cfg.d_ff, dt, gated=False)}
+    raise ValueError(kind)
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe", "ssm": "ssm",
+            "hybrid": "ssm", "audio": "encdec"}[cfg.family]
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    kind = _layer_kind(cfg)
+    k_emb, k_layers, k_extra, k_enc = jax.random.split(rng, 4)
+    n_branch = 3 if cfg.supernet else None
+
+    def one_layer(k):
+        return block_init(k, cfg, kind)
+
+    keys = jax.random.split(k_layers, cfg.num_layers * (n_branch or 1))
+    if n_branch:
+        keys = keys.reshape(cfg.num_layers, n_branch, 2)
+        layers = jax.vmap(jax.vmap(one_layer))(keys)
+    else:
+        layers = jax.vmap(one_layer)(keys)
+
+    params: Params = {
+        "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, cfg.jdtype),
+        "final_ln": rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "layers": layers,
+    }
+    if cfg.family == "hybrid":
+        params["shared"] = block_init(k_extra, cfg, "dense")
+    if cfg.family == "vlm":
+        params["proj"] = dense_init(k_extra, cfg.d_model, cfg.d_model,
+                                    cfg.jdtype, with_bias=True)
+    if cfg.family == "audio":
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["encoder"] = jax.vmap(lambda k: block_init(k, cfg, "enc"))(enc_keys)
+        params["enc_ln"] = rmsnorm_init(cfg.d_model, cfg.jdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_kw(cfg, window):
+    return dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.hd, rope_style=cfg.rope_style,
+                theta=cfg.rope_theta, window=window)
+
+
+def _dense_block_fwd(p, h, positions, cfg, window, backend,
+                     ff_mask=None, head_mask=None, causal=True):
+    h = h + attn.self_attention(p["attn"], rmsnorm(p["ln1"], h), positions,
+                                causal=causal, head_mask=head_mask,
+                                backend=backend, **_attn_kw(cfg, window))
+    h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h), ff_mask=ff_mask)
+    return h, jnp.float32(0.0)
+
+
+def _moe_block_fwd(p, h, positions, cfg, window, backend,
+                   ff_mask=None, head_mask=None):
+    from repro.models.moe import moe_apply
+    h = h + attn.self_attention(p["attn"], rmsnorm(p["ln1"], h), positions,
+                                head_mask=head_mask, backend=backend,
+                                **_attn_kw(cfg, window))
+    y, aux = moe_apply(p["moe"], rmsnorm(p["ln2"], h), cfg, ff_mask=ff_mask)
+    return h + y, aux
+
+
+def _ssm_block_fwd(p, h, cfg, backend, state_mask=None, head_mask=None):
+    y = ssm_mod.ssm_forward(p["ssm"], rmsnorm(p["ln"], h), cfg,
+                            state_mask=state_mask, head_mask=head_mask,
+                            backend=backend)
+    return h + y, jnp.float32(0.0)
+
+
+def _make_branch_fns(cfg, masks, positions, window, backend):
+    """4 choice-block branches with identical (p, h) -> (h, aux) signatures."""
+    kind = _layer_kind(cfg)
+
+    def identity(p, h):
+        return h, jnp.float32(0.0)
+
+    if kind == "dense":
+        full = lambda p, h: _dense_block_fwd(p, h, positions, cfg, window, backend)
+        bottle = lambda p, h: _dense_block_fwd(p, h, positions, cfg, window,
+                                               backend, ff_mask=masks["ff"])
+        lite = lambda p, h: _dense_block_fwd(p, h, positions, cfg, window,
+                                             backend, head_mask=masks["head"])
+    elif kind == "moe":
+        full = lambda p, h: _moe_block_fwd(p, h, positions, cfg, window, backend)
+        bottle = lambda p, h: _moe_block_fwd(p, h, positions, cfg, window,
+                                             backend, ff_mask=masks["moe_ff"])
+        lite = lambda p, h: _moe_block_fwd(p, h, positions, cfg, window,
+                                           backend, head_mask=masks["head"])
+    elif kind == "ssm":
+        full = lambda p, h: _ssm_block_fwd(p, h, cfg, backend)
+        bottle = lambda p, h: _ssm_block_fwd(p, h, cfg, backend,
+                                             state_mask=masks["state"])
+        lite = lambda p, h: _ssm_block_fwd(p, h, cfg, backend,
+                                           head_mask=masks["ssm_head"])
+    else:
+        raise ValueError(f"supernet unsupported for kind {kind}")
+    return identity, full, bottle, lite
+
+
+def _constrain_activations(h):
+    """Pin the residual stream to (data-sharded batch, replicated seq/d).
+
+    The embedding gather reads a (vocab x d) table sharded (model, data);
+    without this constraint GSPMD propagates the table's sharding into the
+    residual stream entering the layer scan, replicating every layer's
+    activations over part of the mesh (measured ~17 GB/layer/device for
+    deepseek at train_4k)."""
+    from repro.launch import policy
+    mesh = policy.get_mesh()
+    if mesh is None:
+        return h
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if h.shape[0] % policy.data_axis_size(mesh) != 0:
+        return h
+    spec = P(dax, *([None] * (h.ndim - 1)))
+    return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            prefix: Optional[jax.Array] = None,
+            choice_key: Optional[jax.Array] = None,
+            window: int = 0, backend: str = "xla", remat: bool = False,
+            return_cache: bool = False, cache_len: int = 0,
+            return_hidden: bool = False, unroll: bool = False
+            ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
+    """Full-sequence forward for every decoder-bearing family.
+
+    tokens: (B, S) int32.  prefix: stub frontend embeddings — (B, P, d) patch
+    embeddings (vlm) or (B, F, d) audio frames (audio; routed through the
+    encoder).  Returns (logits over the token positions, moe aux loss,
+    optional prefill cache).
+    """
+    kind = _layer_kind(cfg)
+    b, s = tokens.shape
+    h = _constrain_activations(embed(params["embed"], tokens))
+    n_prefix = 0
+    enc_out = None
+
+    if cfg.family == "vlm":
+        assert prefix is not None
+        pfx = dense(params["proj"], prefix.astype(h.dtype))
+        h = jnp.concatenate([pfx, h], axis=1)
+        n_prefix = pfx.shape[1]
+    if cfg.family == "audio":
+        assert prefix is not None
+        enc_out = encode(params, cfg, prefix, backend=backend,
+                         unroll=unroll)
+        h = h + sinusoidal_positions(s, cfg.d_model, h.dtype)[None]
+
+    total = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (b, total))
+    masks = branch_masks(cfg) if cfg.supernet else {}
+
+    # ---- scan body -------------------------------------------------------
+    def body(carry, xs):
+        h, aux = carry
+        if cfg.supernet:
+            p_b, key_l, li = xs   # branch params pre-gathered outside scan
+            fns = _make_branch_fns(cfg, masks, positions, window, backend)
+            h, a = jax.lax.switch(key_l, fns, p_b, h)
+        else:
+            p_l, li = xs
+            if kind == "dense":
+                h, a = _dense_block_fwd(p_l, h, positions, cfg, window, backend)
+            elif kind == "moe":
+                h, a = _moe_block_fwd(p_l, h, positions, cfg, window, backend)
+            elif kind == "ssm":
+                h, a = _ssm_block_fwd(p_l, h, cfg, backend)
+            elif kind == "encdec":
+                h = h + attn.self_attention(
+                    p_l["attn"], rmsnorm(p_l["ln1"], h), positions,
+                    backend=backend, **_attn_kw(cfg, window))
+                kv = attn.encode_kv(p_l["xattn"], enc_out,
+                                    num_kv_heads=cfg.num_kv_heads)
+                h = h + attn.cross_attention(
+                    p_l["xattn"], rmsnorm(p_l["lnx"], h), kv,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.hd)
+                h = h + mlp(p_l["mlp"], rmsnorm(p_l["ln2"], h))
+                a = jnp.float32(0.0)
+            else:
+                raise ValueError(kind)
+        if cfg.family == "hybrid":
+            h = jax.lax.cond(
+                jnp.mod(li, cfg.attn_every) == cfg.attn_every - 1,
+                lambda hh: _dense_block_fwd(params["shared"], hh, positions,
+                                            cfg, window, backend)[0],
+                lambda hh: hh, h)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    lidx = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    if cfg.supernet:
+        # gather each layer's SELECTED branch once, outside the scan —
+        # otherwise the scan streams all 3 branches' weights from HBM
+        # every step (identity clamps to branch 0; its params are unused)
+        ck = jnp.maximum(choice_key - 1, 0)
+        sel = jax.tree.map(
+            lambda x: jax.vmap(lambda xl, i: xl[i])(x, ck),
+            params["layers"])
+        xs = (sel, choice_key, lidx)
+    else:
+        xs = (params["layers"], lidx)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), xs,
+                               unroll=cfg.num_layers if unroll else 1)
+
+    h = rmsnorm(params["final_ln"], h)
+    if return_hidden:
+        # caller fuses unembed + loss (fused_cross_entropy) — do not
+        # materialize the (B, S, V) logits here
+        logits = h[:, n_prefix:, :]
+    else:
+        logits = unembed(params["embed"], h[:, n_prefix:, :])
+
+    cache = None
+    if return_cache:
+        cache = prefill_cache(params, cfg, tokens, prefix=prefix,
+                              window=window, cache_len=cache_len or total,
+                              enc_out=enc_out)
+    return logits, aux, cache
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array, *,
+           backend: str = "xla", unroll: bool = False) -> jax.Array:
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    h = frames.astype(cfg.jdtype)
+    b, f, _ = h.shape
+    h = h + sinusoidal_positions(f, cfg.d_model, h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    def body(h, p_l):
+        h, _ = _dense_block_fwd(p_l, h, positions, cfg, 0, backend,
+                                causal=False)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"],
+                        unroll=cfg.encoder_layers if unroll else 1)
+    return rmsnorm(params["enc_ln"], h)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(params: Params, cfg: ModelConfig, batch: int, cache_len: int,
+               enc_len: int = 0) -> Params:
+    kind = _layer_kind(cfg)
+    L = cfg.num_layers
+    dt = cfg.jdtype
+
+    def rep(tree):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), tree)
+
+    cache: Params = {"t": jnp.zeros((), jnp.int32)}
+    if kind in ("dense", "moe"):
+        cache["layers"] = rep(attn.init_cache(batch, cfg.num_kv_heads, cfg.hd,
+                                              cache_len, dt))
+    elif kind == "ssm":
+        cache["layers"] = rep(ssm_mod.init_ssm_cache(batch, cfg, dt))
+    elif kind == "encdec":
+        c = attn.init_cache(batch, cfg.num_kv_heads, cfg.hd, cache_len, dt)
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), dt)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), dt)
+        cache["layers"] = rep(c)
+    if cfg.family == "hybrid":
+        # one KV cache per shared-block application point
+        n_app = cfg.num_layers // cfg.attn_every
+        c = attn.init_cache(batch, cfg.num_kv_heads, cfg.hd, cache_len, dt)
+        cache["shared"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_app,) + x.shape), c)
+    return cache
+
+
+def prefill_cache(params, cfg, tokens, *, prefix=None, window=0,
+                  cache_len=0, enc_out=None):
+    """Build a decode cache by replaying the sequence (reference path).
+
+    Production prefill fuses this with ``forward``; for the dry-run shapes we
+    lower ``forward(return_cache=False)`` (prefill compute) and
+    ``decode_step`` (steady-state decode) separately, so this replay path is
+    only used by tests and the CPU serving example.
+    """
+    b, s = tokens.shape
+    cache = init_cache(params, cfg, b, cache_len or s,
+                       enc_len=0 if enc_out is None else enc_out.shape[1])
+    if enc_out is not None:
+        def fill_cross(c_l, p_l):
+            k, v = attn.encode_kv(p_l["xattn"], enc_out,
+                                  num_kv_heads=cfg.num_kv_heads)
+            c_l = dict(c_l)
+            c_l["cross_k"], c_l["cross_v"] = k, v
+            return c_l
+        cache["layers"] = jax.vmap(fill_cross)(cache["layers"], params["layers"])
+
+    def step(cache, tok):
+        logits, cache = decode_step(params, cfg, tok[:, None], cache,
+                                    window=window)
+        return cache, logits[:, 0]
+
+    cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+    return cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Params, *, window: int = 0, unroll: bool = False
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step.  token: (B, 1) int32 -> (logits (B, 1, V), cache)."""
+    kind = _layer_kind(cfg)
+    t = cache["t"]
+    h = _constrain_activations(embed(params["embed"], token))
+    if cfg.family == "audio":
+        h = h + sinusoidal_positions(1, cfg.d_model, h.dtype, offset=t)[None]
+    kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+              head_dim=cfg.hd, rope_style=cfg.rope_style, theta=cfg.rope_theta,
+              window=window)
+
+    def body(carry, xs):
+        h, sh_cache = carry
+        p_l, c_l, li = xs
+        if kind in ("dense", "moe"):
+            y, c_l2 = attn.decode_self_attention(p_l["attn"],
+                                                 rmsnorm(p_l["ln1"], h),
+                                                 c_l, t, **kw)
+            h = h + y
+            if kind == "moe":
+                from repro.models.moe import moe_apply
+                y, _ = moe_apply(p_l["moe"], rmsnorm(p_l["ln2"], h), cfg)
+                h = h + y
+            else:
+                h = h + mlp(p_l["mlp"], rmsnorm(p_l["ln2"], h))
+        elif kind == "ssm":
+            y, c_l2 = ssm_mod.ssm_decode_step(p_l["ssm"],
+                                              rmsnorm(p_l["ln"], h), c_l, cfg)
+            h = h + y
+        elif kind == "encdec":
+            c_self = {"k": c_l["k"], "v": c_l["v"], "pos": c_l["pos"]}
+            y, c_self = attn.decode_self_attention(
+                p_l["attn"], rmsnorm(p_l["ln1"], h), c_self, t, **kw)
+            h = h + y
+            h = h + attn.cross_attention(
+                p_l["xattn"], rmsnorm(p_l["lnx"], h),
+                (c_l["cross_k"], c_l["cross_v"]),
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.hd)
+            h = h + mlp(p_l["mlp"], rmsnorm(p_l["ln2"], h))
+            c_l2 = dict(c_l)
+            c_l2.update(c_self)
+        else:
+            raise ValueError(kind)
+
+        if cfg.family == "hybrid":
+            # the shared attention+mlp block fires every attn_every layers,
+            # each application point owning its own KV cache slice.
+            def apply_shared(args):
+                hh, shc = args
+                idx = li // cfg.attn_every
+                c = jax.tree.map(lambda x: x[idx], shc)
+                y, c2 = attn.decode_self_attention(
+                    params["shared"]["attn"],
+                    rmsnorm(params["shared"]["ln1"], hh), c, t, **kw)
+                hh = hh + y
+                hh = hh + mlp(params["shared"]["mlp"],
+                              rmsnorm(params["shared"]["ln2"], hh))
+                shc = jax.tree.map(
+                    lambda x, u: jax.lax.dynamic_update_index_in_dim(
+                        x, u, idx, 0), shc, c2)
+                return hh, shc
+
+            h, sh_cache = jax.lax.cond(
+                jnp.mod(li, cfg.attn_every) == cfg.attn_every - 1,
+                apply_shared, lambda a: a, (h, sh_cache))
+        return (h, sh_cache), c_l2
+
+    lidx = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    sh0 = cache.get("shared")
+    (h, sh_cache), new_layers = jax.lax.scan(
+        body, (h, sh0), (params["layers"], cache["layers"], lidx),
+        unroll=cfg.num_layers if unroll else 1)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    if cfg.family == "hybrid":
+        new_cache["shared"] = sh_cache
+
+    h = rmsnorm(params["final_ln"], h)
+    logits = unembed(params["embed"], h)
+    new_cache["t"] = t + 1
+    return logits, new_cache

@@ -1,0 +1,6 @@
+from repro.optim.optim import (
+    adamw_init, adamw_update, sgd_init, sgd_update, round_decay, cosine_decay,
+)
+
+__all__ = ["adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "round_decay", "cosine_decay"]

@@ -1,0 +1,62 @@
+"""Optimizers (pure pytree transforms) and learning-rate schedules.
+
+SGD + momentum reproduces the paper's client optimizer (Table II: lr 0.1,
+momentum 0.5, per-round decay 0.995).  AdamW is provided for the
+(non-federated) LM training path of the launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def sgd_init(params: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_update(params: Params, grads: Params, vel: Params, lr,
+               momentum: float = 0.5) -> Tuple[Params, Params]:
+    vel = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+    params = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype), params, vel)
+    return params, vel
+
+
+def adamw_init(params: Params) -> Params:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Params, grads: Params, state, lr,
+                 b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    step = state["step"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mh, vh):
+        u = (mh / c1) / (jnp.sqrt(vh / c2) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}
+
+
+def round_decay(lr0: float, decay: float, t) -> jnp.ndarray:
+    """Paper Table II: lr(t) = lr0 * decay^t per communication round."""
+    return jnp.asarray(lr0 * decay ** t, jnp.float32)
+
+
+def cosine_decay(lr0: float, step, total: int, warmup: int = 0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr0 * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = lr0 * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,55 @@
+"""Choice-key encoding + genetic-operator property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import choice
+
+keys = st.lists(st.integers(0, 3), min_size=1, max_size=24).map(
+    lambda l: np.asarray(l, np.int32))
+
+
+@settings(max_examples=100, deadline=None)
+@given(keys)
+def test_bits_roundtrip(key):
+    bits = choice.key_to_bits(key)
+    assert len(bits) == 2 * len(key)
+    assert set(np.unique(bits)) <= {0, 1}
+    np.testing.assert_array_equal(choice.bits_to_key(bits), key)
+
+
+def test_paper_encoding_convention():
+    # [0,0]=0 identity, [0,1]=1 residual, [1,0]=2 inverted, [1,1]=3 sepconv
+    np.testing.assert_array_equal(
+        choice.key_to_bits(np.array([0, 1, 2, 3])),
+        np.array([0, 0, 0, 1, 1, 0, 1, 1]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys, st.integers(0, 2**31 - 1))
+def test_crossover_preserves_multiset(key, seed):
+    rng = np.random.default_rng(seed)
+    a, b = choice.key_to_bits(key), choice.key_to_bits(key[::-1].copy())
+    c1, c2 = choice.one_point_crossover(rng, a, b)
+    assert sorted(np.concatenate([c1, c2])) == sorted(np.concatenate([a, b]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys, st.integers(0, 2**31 - 1))
+def test_mutation_p0_and_p1(key, seed):
+    rng = np.random.default_rng(seed)
+    bits = choice.key_to_bits(key)
+    np.testing.assert_array_equal(choice.bit_flip_mutation(rng, bits, 0.0),
+                                  bits)
+    np.testing.assert_array_equal(choice.bit_flip_mutation(rng, bits, 1.0),
+                                  1 - bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_make_offspring_count_and_validity(n_off, blocks, seed):
+    rng = np.random.default_rng(seed)
+    parents = [choice.random_key(rng, blocks) for _ in range(4)]
+    off = choice.make_offspring(rng, parents, n_off)
+    assert len(off) == n_off
+    for k in off:
+        assert len(k) == blocks and k.min() >= 0 and k.max() <= 3

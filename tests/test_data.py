@@ -1,0 +1,80 @@
+"""Federated data partitioner invariants (hypothesis) + pipeline shapes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    ClientDataset, batched, make_classification, make_clients, make_lm_stream,
+    partition_dirichlet, partition_iid, partition_label,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 500), st.integers(1, 10), st.integers(0, 1000))
+def test_iid_partition_is_disjoint_cover(n, k, seed):
+    shards = partition_iid(seed, n, k)
+    allidx = np.concatenate(shards)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 5), st.integers(0, 1000))
+def test_label_partition_classes_per_client(k, cpc, seed):
+    labels = np.repeat(np.arange(10), 50)
+    shards = partition_label(seed, labels, k, classes_per_client=cpc)
+    allidx = np.concatenate([s for s in shards if len(s)])
+    assert len(np.unique(allidx)) == len(allidx)          # disjoint
+    for s in shards:
+        if len(s):
+            assert len(np.unique(labels[s])) <= cpc       # non-IID bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.floats(0.1, 10.0), st.integers(0, 100))
+def test_dirichlet_partition_covers(k, alpha, seed):
+    labels = np.repeat(np.arange(10), 30)
+    shards = partition_dirichlet(seed, labels, k, alpha)
+    allidx = np.concatenate([s for s in shards if len(s)])
+    assert len(np.unique(allidx)) == len(allidx) == len(labels)
+
+
+def test_batched_shapes_and_drop_tail():
+    x = np.arange(107, dtype=np.float32)[:, None]
+    y = np.arange(107)
+    xb, yb = batched(x, y, 10)
+    assert xb.shape == (10, 10, 1) and yb.shape == (10, 10)
+
+
+def test_client_dataset_split():
+    x, y = make_classification(0, 500, image=8)
+    c = ClientDataset(0, x, y, batch=25, test_batch=25)
+    assert c.train[0].shape[1] == 25
+    assert c.test[0].shape[1] == 25
+    assert c.weight == c.n_train > 0
+
+
+def test_classification_learnable_structure():
+    """Same class => prototypes correlate; 0 noise => exactly equal."""
+    x, y = make_classification(0, 200, image=8, noise=0.0)
+    i, j = np.where(y == y[0])[0][:2]
+    np.testing.assert_allclose(x[i], x[j])
+
+
+def test_lm_stream_markov_structure():
+    x, y = make_lm_stream(0, 20, 50, vocab=97, order_noise=0.0)
+    assert x.shape == (20, 50) and y.shape == (20, 50)
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])  # y is next-token
+    # deterministic successor: same token always followed by same token
+    tok = x[0, 0]
+    followers = {int(y[r, c]) for r in range(20) for c in range(50)
+                 if x[r, c] == tok}
+    assert len(followers) == 1
+
+
+def test_make_clients_weights_sum():
+    x, y = make_classification(1, 400, image=8)
+    shards = partition_iid(1, 400, 4)
+    clients = make_clients(x, y, shards, batch=20, test_batch=20)
+    assert len(clients) == 4
+    assert sum(c.n_train for c in clients) <= 400

@@ -1,0 +1,77 @@
+"""Analytic FLOPs/params counters: paper-table consistency + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import flops
+
+
+def test_cnn_identity_cheapest_sepconv_vs_residual():
+    k_id = np.zeros(12, dtype=int)
+    k_res = np.ones(12, dtype=int)
+    k_sep = np.full(12, 3)
+    m_id = flops.cnn_subnet_macs(k_id)
+    m_res = flops.cnn_subnet_macs(k_res)
+    m_sep = flops.cnn_subnet_macs(k_sep)
+    assert m_id < m_sep < m_res     # depthwise ~8-9x cheaper than conv
+
+
+def test_cnn_macs_magnitude_matches_paper_scale():
+    """Paper Table IV: evolved models are 0.03-0.4 GMAC; the all-residual
+    master path should land in the same order as ResNet18 (0.5587 G)."""
+    m = flops.cnn_subnet_macs(np.ones(12, dtype=int))
+    assert 0.1e9 < m < 1.5e9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=12, max_size=12),
+       st.integers(0, 11))
+def test_cnn_macs_monotone_in_branch_upgrade(key, pos):
+    """Replacing identity by any parameterized branch never lowers MACs."""
+    key = np.asarray(key)
+    base = key.copy()
+    base[pos] = 0
+    up = key.copy()
+    up[pos] = 1
+    assert flops.cnn_subnet_macs(base) <= flops.cnn_subnet_macs(up)
+
+
+def test_model_params_match_model_names():
+    approx = {
+        "qwen1.5-0.5b": 0.62e9, "mamba2-780m": 0.78e9,
+        "starcoder2-3b": 3.1e9, "chatglm3-6b": 6.2e9,
+        "deepseek-67b": 67e9, "zamba2-2.7b": 2.7e9,
+    }
+    for arch, expect in approx.items():
+        got = flops.model_params(get_config(arch))
+        assert 0.55 * expect < got < 1.6 * expect, (arch, got, expect)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("llama4-scout-17b-a16e")
+    total = flops.model_params(cfg)
+    active = flops.model_params(cfg, active_only=True)
+    assert active < total
+    assert total > 15e9          # "17B" total
+    # top-1 of 16 experts + shared => far fewer active
+    assert active < 0.35 * total
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=24, max_size=24))
+def test_subnet_params_bounded_by_full(key):
+    cfg = get_config("qwen1.5-0.5b")
+    key = np.asarray(key)
+    sub = flops.subnet_params(cfg, key)
+    full = flops.subnet_params(cfg, np.ones(24, dtype=int))
+    assert sub <= flops.model_params(cfg)
+    assert flops.subnet_params(cfg, np.zeros(24, dtype=int)) <= sub or \
+        key.min() == 0
+    assert sub <= full or key.max() > 1
+
+
+def test_train_flops_is_6nd():
+    cfg = get_config("qwen1.5-0.5b")
+    n = flops.model_params(cfg, active_only=True)
+    assert flops.train_flops(cfg, 1000) == pytest.approx(6.0 * n * 1000)

@@ -1,0 +1,79 @@
+"""NSGA-II unit + property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nsga2
+
+objs_strategy = st.integers(3, 24).flatmap(
+    lambda n: st.lists(
+        st.tuples(st.floats(0, 1, allow_nan=False),
+                  st.floats(0, 1, allow_nan=False)),
+        min_size=n, max_size=n))
+
+
+def brute_force_front(objs):
+    n = len(objs)
+    return sorted(i for i in range(n)
+                  if not any(nsga2.dominates(objs[j], objs[i])
+                             for j in range(n) if j != i))
+
+
+def test_dominates_basic():
+    assert nsga2.dominates(np.array([0.1, 1.0]), np.array([0.2, 1.0]))
+    assert not nsga2.dominates(np.array([0.1, 2.0]), np.array([0.2, 1.0]))
+    assert not nsga2.dominates(np.array([0.1, 1.0]), np.array([0.1, 1.0]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(objs_strategy)
+def test_first_front_matches_brute_force(vals):
+    objs = np.asarray(vals)
+    fronts = nsga2.fast_non_dominated_sort(objs)
+    assert sorted(fronts[0]) == brute_force_front(objs)
+
+
+@settings(max_examples=50, deadline=None)
+@given(objs_strategy)
+def test_fronts_partition_population(vals):
+    objs = np.asarray(vals)
+    fronts = nsga2.fast_non_dominated_sort(objs)
+    flat = [i for f in fronts for i in f]
+    assert sorted(flat) == list(range(len(objs)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(objs_strategy)
+def test_no_intra_front_domination(vals):
+    objs = np.asarray(vals)
+    for front in nsga2.fast_non_dominated_sort(objs):
+        for i in front:
+            for j in front:
+                assert not nsga2.dominates(objs[i], objs[j])
+
+
+@settings(max_examples=50, deadline=None)
+@given(objs_strategy, st.integers(1, 10))
+def test_select_size_and_elitism(vals, n_sel):
+    objs = np.asarray(vals)
+    n_sel = min(n_sel, len(objs))
+    sel = nsga2.select(objs, n_sel)
+    assert len(sel) == n_sel and len(set(sel)) == n_sel
+    # every first-front member not selected implies the front overflowed
+    front0 = set(nsga2.fast_non_dominated_sort(objs)[0])
+    if len(front0) <= n_sel:
+        assert front0 <= set(sel)
+
+
+def test_crowding_extremes_infinite():
+    objs = np.array([[0.0, 1.0], [0.5, 0.5], [1.0, 0.0], [0.9, 0.1]])
+    dist = nsga2.crowding_distance(objs, [0, 1, 2, 3])
+    assert np.isinf(dist[0]) and np.isinf(dist[2])
+    assert np.isfinite(dist[1]) and np.isfinite(dist[3])
+
+
+def test_knee_point_picks_bulge():
+    # convex front: knee should be the middle bulge point
+    front = [0, 1, 2]
+    objs = np.array([[0.0, 1.0], [0.1, 0.1], [1.0, 0.0]])
+    assert nsga2.knee_point(objs, front) == 1

@@ -1,0 +1,75 @@
+"""Optimizers, schedules, and checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import load_pytree, restore_latest, save_pytree
+from repro.optim import (
+    adamw_init, adamw_update, cosine_decay, round_decay, sgd_init, sgd_update,
+)
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "adamw"])
+def test_optimizers_converge_on_quadratic(opt):
+    params = {"w": jnp.zeros(4), "b": jnp.zeros(2)}
+    state = sgd_init(params) if opt == "sgd" else adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(params)
+        if opt == "sgd":
+            params, state = sgd_update(params, g, state, 0.05, 0.5)
+        else:
+            params, state = adamw_update(params, g, state, 0.05, wd=0.0)
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_round_decay_matches_paper():
+    # Table II: lr0 0.1, decay 0.995 per round
+    assert float(round_decay(0.1, 0.995, 0)) == pytest.approx(0.1)
+    assert float(round_decay(0.1, 0.995, 100)) == pytest.approx(
+        0.1 * 0.995 ** 100)
+
+
+def test_cosine_decay_warmup_and_floor():
+    assert float(cosine_decay(1.0, 0, 100, warmup=10)) == pytest.approx(0.0)
+    assert float(cosine_decay(1.0, 10, 100, warmup=10)) == pytest.approx(
+        1.0, rel=1e-3)
+    assert float(cosine_decay(1.0, 100, 100, warmup=10)) == pytest.approx(
+        0.0, abs=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    path = save_pytree(str(tmp_path / "ckpt"), tree, step=7)
+    restored = load_pytree(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_restore_latest_picks_newest(tmp_path):
+    tree = {"w": jnp.zeros(3)}
+    d = str(tmp_path / "ckpts")
+    save_pytree(d, {"w": jnp.ones(3)}, step=1)
+    save_pytree(d, {"w": jnp.full(3, 2.0)}, step=2)
+    restored, step = restore_latest(d, tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 2.0)
+
+
+def test_restore_latest_empty(tmp_path):
+    restored, step = restore_latest(str(tmp_path / "nope"), {"w": jnp.zeros(1)})
+    assert restored is None and step == -1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = save_pytree(str(tmp_path / "c"), {"w": jnp.zeros((2, 2))}, step=0)
+    with pytest.raises(ValueError):
+        load_pytree(path, {"w": jnp.zeros((3, 3))})

@@ -1,0 +1,159 @@
+"""End-to-end behaviour of the paper's system (CPU-scaled).
+
+Covers: double-sampling invariants, the real-time NAS loop (Algorithm 4),
+the offline-ENAS baseline, the communication/compute accounting behind the
+paper's efficiency claims, and the roofline HLO parser.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_api, nsga2, offline_enas, rt_enas
+from repro.core.double_sampling import (
+    sample_client_groups, sample_participants, sample_population_keys,
+)
+from repro.data import make_classification, make_clients, partition_iid, \
+    partition_label
+
+
+def tiny_clients(num_clients=8, n=480, image=8, seed=0, noniid=False):
+    x, y = make_classification(seed, n, image=image, signal=1.5, noise=0.5)
+    if noniid:
+        shards = partition_label(seed, y, num_clients, classes_per_client=5)
+    else:
+        shards = partition_iid(seed, n, num_clients)
+    return make_clients(x, y, shards, batch=20, test_batch=20)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+# ---------------------------------------------------------------------------
+# double-sampling
+# ---------------------------------------------------------------------------
+
+def test_client_groups_disjoint_without_replacement():
+    rng = np.random.default_rng(0)
+    participants = sample_participants(rng, 20, 1.0)
+    groups = sample_client_groups(rng, participants, 6)
+    assert len(groups) == 6
+    flat = np.concatenate(groups)
+    assert len(flat) == len(set(flat.tolist()))       # each client once
+    assert all(len(g) == 20 // 6 for g in groups)     # L = floor(m/N)
+
+
+def test_client_groups_require_enough_clients():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_client_groups(rng, np.arange(3), 6)
+
+
+def test_participation_fraction():
+    rng = np.random.default_rng(1)
+    assert len(sample_participants(rng, 20, 0.5)) == 10
+    assert len(sample_participants(rng, 20, 1.0)) == 20
+
+
+# ---------------------------------------------------------------------------
+# real-time loop (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rt_history(api):
+    clients = tiny_clients()
+    rc = rt_enas.RunConfig(population=4, generations=2, seed=0)
+    return rt_enas.run(api, clients, rc), clients, rc
+
+
+def test_rt_runs_and_reports(rt_history):
+    hist, clients, rc = rt_history
+    assert hist["gen"] == [1, 2]
+    assert all(0.0 <= e <= 1.0 for e in hist["best_err"])
+    objs = hist["objs"][-1]
+    assert objs.shape == (2 * rc.population, 2)
+    assert (objs[:, 1] > 0).all()                     # FLOPs objective
+
+
+def test_rt_one_training_pass_per_client_per_generation(rt_history):
+    """The paper's core efficiency claim: after generation 1 (which also
+    trains parents), each generation adds exactly one pass per client."""
+    hist, clients, rc = rt_history
+    m = len(clients)
+    assert hist["train_passes"][0] == 2 * m           # parents + offspring
+    assert hist["train_passes"][1] - hist["train_passes"][0] == m
+
+
+def test_rt_parent_selection_is_nsga2(rt_history):
+    hist, _, rc = rt_history
+    assert len(hist["parent_keys"][-1]) == rc.population
+    # knee/best keys decode to valid branch ids
+    assert set(np.asarray(hist["best_key"][-1]).tolist()) <= {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# offline baseline + cost comparison (paper Section IV.G)
+# ---------------------------------------------------------------------------
+
+def test_offline_costs_dominate_rt(api):
+    clients = tiny_clients()
+    rc = rt_enas.RunConfig(population=4, generations=2, seed=0)
+    hist_rt = rt_enas.run(api, clients, rc)
+    hist_off = offline_enas.run(api, clients, rc)
+    m, n = len(clients), rc.population
+    # offline: every client trains every individual; parents evaluated once
+    off_passes = hist_off["train_passes"][-1]
+    rt_passes = hist_rt["train_passes"][-1]
+    assert off_passes == (1 + 2) * n * m  # parents once + 2 gens offspring
+    assert off_passes / rt_passes >= n / 2  # ~N x more local compute
+    # upload volume is much larger offline
+    assert hist_off["stats"].up_bytes > 2 * hist_rt["stats"].up_bytes
+
+
+def test_offline_runs_and_reports(api):
+    clients = tiny_clients()
+    rc = rt_enas.RunConfig(population=3, generations=2, seed=1)
+    hist_off = offline_enas.run(api, clients, rc)
+    assert hist_off["gen"] == [1, 2]
+    assert np.isfinite(hist_off["best_err"]).all()
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parser
+# ---------------------------------------------------------------------------
+
+def test_parse_collectives_counts_operands():
+    from repro.launch.roofline import parse_collectives
+    hlo = """
+  %ar = bf16[128,256] all-reduce(bf16[128,256] %x), replica_groups={}
+  %ag.1 = f32[64]{0} all-gather(f32[32]{0} %y), dimensions={0}
+  %rs = f32[16] reduce-scatter(f32[64] %z), dimensions={0}
+  %a2a.s = (f32[8,8]) all-to-all-start(f32[8,8] %w), dimensions={0}
+  %a2a.d = f32[8,8] all-to-all-done(%a2a.s)
+  %cp = u32[4] collective-permute(u32[4] %p), source_target_pairs={{0,1}}
+  %not_a_collective = f32[2] add(f32[2] %a, f32[2] %b)
+"""
+    got = parse_collectives(hlo)
+    assert got["all-reduce"] == 128 * 256 * 2
+    assert got["all-gather"] == 64 * 4     # max(result, operand) side
+    assert got["reduce-scatter"] == 64 * 4
+    assert got["all-to-all"] == 8 * 8 * 4
+    assert got["collective-permute"] == 4 * 4
+    assert got["ops"] == 5
+    assert got["total"] == sum(got[k] for k in
+                               ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.roofline import roofline_terms
+    t = roofline_terms(197e12, 0.0, 0.0)
+    assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)
+    t = roofline_terms(0.0, 819e9, 0.0)
+    assert t["dominant"] == "memory" and t["memory_s"] == pytest.approx(1.0)
+    t = roofline_terms(0.0, 0.0, 200e9)
+    assert t["dominant"] == "collective"
+    assert t["collective_s"] == pytest.approx(1.0)
