@@ -4,6 +4,16 @@ Scaled to this container (16x16 synthetic images, tens of generations) —
 the *relative* claims of the paper (RT vs offline cost, Pareto shape,
 FLOPs reduction vs the fixed baseline) are what the benchmarks validate;
 see DESIGN.md Section 8 for the simulation boundary.
+
+Everything routes through ``repro.engine.FedEngine``; the
+``engine_backend`` argument selects the client-execution path ("loop" =
+reference per-pair dispatch, "vmap" = ClientBatch-stacked).  Run
+
+    PYTHONPATH=src python benchmarks/fed_nas.py
+
+to compare the two backends on the default cross-device config (many
+small clients — the axis the loop backend's O(population x clients)
+dispatch count scales with).
 """
 from __future__ import annotations
 
@@ -13,23 +23,23 @@ import time
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import make_api, nsga2, offline_enas, rt_enas
-from repro.core.federated import fedavg_round, make_client_update, \
-    make_evaluator, weighted_test_error
+from repro.core import make_api, nsga2
 from repro.data import make_classification, make_clients, partition_iid, \
     partition_label
+from repro.engine import FedAvgBaseline, FedEngine, OfflineNas, RealTimeNas, \
+    RunConfig
 
 IMAGE = 16
 RESNET_LIKE_KEY = np.ones(4, dtype=np.int32)   # all-residual master path
 
 
 def build_clients(num_clients: int, iid: bool, seed: int = 0,
-                  n: int = 2000, batch: int = 50, test_batch: int = 50):
-    x, y = make_classification(seed, n, image=IMAGE, signal=1.2, noise=0.8)
+                  n: int = 2000, batch: int = 50, test_batch: int = 50,
+                  image: int = IMAGE):
+    x, y = make_classification(seed, n, image=image, signal=1.2, noise=0.8)
     if iid:
         shards = partition_iid(seed, n, num_clients)
     else:
@@ -42,34 +52,74 @@ def build_api():
 
 
 def run_rt(api, clients, generations: int, population: int = 6,
-           seed: int = 0, backend: str = "xla") -> Dict:
-    rc = rt_enas.RunConfig(population=population, generations=generations,
-                           seed=seed, aggregate_backend=backend)
-    return rt_enas.run(api, clients, rc)
+           seed: int = 0, backend: str = "xla",
+           engine_backend: str = "loop") -> Dict:
+    rc = RunConfig(population=population, generations=generations,
+                   seed=seed, aggregate_backend=backend,
+                   backend=engine_backend)
+    return FedEngine(api, clients, rc,
+                     strategy=RealTimeNas()).run().history()
 
 
 def run_offline(api, clients, generations: int, population: int = 6,
-                seed: int = 0) -> Dict:
-    rc = rt_enas.RunConfig(population=population, generations=generations,
-                           seed=seed)
-    return offline_enas.run(api, clients, rc)
+                seed: int = 0, engine_backend: str = "loop") -> Dict:
+    rc = RunConfig(population=population, generations=generations,
+                   seed=seed, backend=engine_backend)
+    return FedEngine(api, clients, rc,
+                     strategy=OfflineNas()).run().history()
 
 
 def run_fixed_baseline(api, clients, rounds: int, key=RESNET_LIKE_KEY,
-                       seed: int = 0) -> Dict:
+                       seed: int = 0, engine_backend: str = "loop") -> Dict:
     """FedAvg on a fixed architecture (the paper's ResNet18 role)."""
-    from repro.optim import round_decay
-    params = api.init(jax.random.PRNGKey(seed))
-    update = make_client_update(api)
-    evaluate = make_evaluator(api)
-    jkey = jnp.asarray(key)
-    errs = []
-    for t in range(rounds):
-        lr = float(round_decay(0.1, 0.995, t))
-        params = fedavg_round(update, params, jkey, clients, lr)
-        errs.append(weighted_test_error(evaluate, params, jkey, clients))
-    return {"err": errs, "flops": api.flops(np.asarray(key)),
-            "params": params}
+    rc = RunConfig(generations=rounds, seed=seed, backend=engine_backend)
+    res = FedEngine(api, clients, rc,
+                    strategy=FedAvgBaseline(key)).run()
+    return {"err": [r.best_err for r in res.reports],
+            "flops": res.extras["flops"],
+            "params": res.extras["params"],
+            "stats": res.stats}
+
+
+def compare_backends(api=None, clients=None, generations: int = 3,
+                     population: int = 6, seed: int = 0) -> Dict:
+    """Same search on both execution backends: wall clock, dispatch
+    counts, and result agreement.  The default client set is the
+    cross-device regime (256 small clients) where the loop backend's
+    O(population x clients) dispatch count is the bottleneck."""
+    api = api or build_api()
+    if clients is None:
+        clients = build_clients(256, iid=True, n=2560, batch=5,
+                                test_batch=5, image=8)
+    out: Dict = {"generations": generations, "population": population,
+                 "clients": len(clients)}
+    hists = {}
+    for bk in ("loop", "vmap"):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=population,
+                                  generations=generations, seed=seed,
+                                  backend=bk))
+        t0 = time.time()
+        res = eng.run()
+        wall = time.time() - t0
+        walls = [r.wall_s for r in res.reports]
+        steady = (walls[-1] - walls[-2]) if len(walls) > 1 else walls[-1]
+        hists[bk] = res
+        out[bk] = {"wall_s": wall, "steady_gen_s": steady,
+                   "dispatches": eng.backend.dispatches,
+                   "dispatches_per_gen": eng.backend.dispatches / generations}
+    la, va = hists["loop"], hists["vmap"]
+    out["speedup_total"] = out["loop"]["wall_s"] / out["vmap"]["wall_s"]
+    out["speedup_steady"] = (out["loop"]["steady_gen_s"]
+                             / out["vmap"]["steady_gen_s"])
+    out["max_err_diff"] = float(max(
+        np.abs(np.asarray(a.objs) - np.asarray(b.objs)).max()
+        for a, b in zip(la.reports, va.reports)))
+    out["max_param_diff"] = float(max(
+        np.abs(np.asarray(p) - np.asarray(q)).max()
+        for p, q in zip(jax.tree.leaves(la.extras["final_master"]),
+                        jax.tree.leaves(va.extras["final_master"]))))
+    return out
 
 
 def summarize_front(api, hist) -> List[Dict]:
@@ -77,7 +127,6 @@ def summarize_front(api, hist) -> List[Dict]:
     objs = hist["objs"][-1]
     sel = nsga2.select(objs, len(hist["parent_keys"][-1]))
     front = nsga2.fast_non_dominated_sort(objs[sel])[0]
-    combined_keys = hist["parent_keys"][-1]
     out = []
     for i in front:
         out.append({"err": float(objs[sel][i, 0]),
@@ -102,3 +151,37 @@ def save_history(path: str, hist: Dict, extra: Optional[Dict] = None):
         rec.update(extra)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="loop vs vmap execution-backend comparison")
+    ap.add_argument("--generations", type=int, default=3)
+    ap.add_argument("--population", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--samples", type=int, default=2560)
+    ap.add_argument("--image", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    clients = build_clients(args.clients, iid=True, n=args.samples,
+                            batch=args.batch, test_batch=args.batch,
+                            image=args.image)
+    rep = compare_backends(build_api(), clients,
+                           generations=args.generations,
+                           population=args.population, seed=args.seed)
+    for bk in ("loop", "vmap"):
+        r = rep[bk]
+        print(f"{bk:>5}: total {r['wall_s']:7.1f}s | steady "
+              f"{r['steady_gen_s']:6.2f}s/gen | "
+              f"{r['dispatches_per_gen']:7.1f} dispatches/gen")
+    print(f"vmap speedup: {rep['speedup_total']:.2f}x total, "
+          f"{rep['speedup_steady']:.2f}x steady-state")
+    print(f"agreement: max err diff {rep['max_err_diff']:.2e}, "
+          f"max master-param diff {rep['max_param_diff']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--offline-generations", type=int, default=2)
     ap.add_argument("--baseline-rounds", type=int, default=0,
                     help="0 = same as --generations")
+    ap.add_argument("--engine-backend", default="loop",
+                    choices=["loop", "vmap"],
+                    help="client-execution backend (FedEngine)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="benchmarks/results")
     args = ap.parse_args()
@@ -47,7 +50,8 @@ def main():
           f"pop {args.population} ===")
     t0 = time.time()
     hist = fed_nas.run_rt(api, clients, args.generations,
-                          population=args.population, seed=args.seed)
+                          population=args.population, seed=args.seed,
+                          engine_backend=args.engine_backend)
     rt_wall = time.time() - t0
     front = fed_nas.summarize_front(api, hist)
     print(f"  wall {rt_wall:.0f}s | best err "
@@ -57,14 +61,16 @@ def main():
 
     print("=== FedAvg fixed baseline (ResNet role) ===")
     rounds = args.baseline_rounds or args.generations
-    base = fed_nas.run_fixed_baseline(api, clients, rounds, seed=args.seed)
+    base = fed_nas.run_fixed_baseline(api, clients, rounds, seed=args.seed,
+                                      engine_backend=args.engine_backend)
     print(f"  err {base['err'][0]:.3f} -> {base['err'][-1]:.3f} "
           f"@ {base['flops']/1e6:.1f} MMACs")
 
     print(f"=== offline ENAS baseline: {args.offline_generations} gens ===")
     t0 = time.time()
     off = fed_nas.run_offline(api, clients, args.offline_generations,
-                              population=args.population, seed=args.seed)
+                              population=args.population, seed=args.seed,
+                              engine_backend=args.engine_backend)
     off_wall = time.time() - t0
     per_gen_rt = rt_wall / args.generations
     per_gen_off = off_wall / args.offline_generations

@@ -3,7 +3,8 @@
 1. build the paper's CNN supernet master model,
 2. sample sub-networks with choice keys and inspect their FLOPs,
 3. run TWO generations of real-time federated evolutionary NAS
-   (double-sampling + fill-aggregation + NSGA-II) on synthetic clients,
+   (double-sampling + fill-aggregation + NSGA-II) on synthetic clients
+   through the FedEngine's vectorized ("vmap") execution backend,
 4. print the Pareto front.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -13,9 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import make_api, nsga2, rt_enas
+from repro.core import make_api, nsga2
 from repro.core.choice import random_key
 from repro.data import make_classification, make_clients, partition_iid
+from repro.engine import FedEngine, RealTimeNas, RunConfig
 
 
 def main():
@@ -38,8 +40,11 @@ def main():
     print(f"{len(clients)} clients, ~{clients[0].n_train} train samples each")
 
     # --- two generations of real-time evolutionary NAS ------------------
-    hist = rt_enas.run(api, clients,
-                       rt_enas.RunConfig(population=4, generations=2, seed=0))
+    engine = FedEngine(api, clients,
+                       RunConfig(population=4, generations=2, seed=0,
+                                 backend="vmap"),
+                       strategy=RealTimeNas())
+    hist = engine.run().history()
     objs = hist["objs"][-1]
     front = nsga2.fast_non_dominated_sort(objs)[0]
     print("\nPareto front after 2 generations (err, MMACs):")
@@ -47,7 +52,8 @@ def main():
         print(f"  err={objs[i, 0]:.3f}  flops={objs[i, 1] / 1e6:8.1f}M")
     print(f"\ncomm so far: down {hist['down_gb'][-1]:.3f} GB, "
           f"up {hist['up_gb'][-1]:.3f} GB, "
-          f"client passes {hist['train_passes'][-1]}")
+          f"client passes {hist['train_passes'][-1]}, "
+          f"jitted dispatches {engine.backend.dispatches}")
 
 
 if __name__ == "__main__":

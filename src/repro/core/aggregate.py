@@ -17,6 +17,7 @@ version of the flat inner loop (this module is its oracle).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
@@ -121,6 +122,44 @@ def _combine_jit(prev_master, clients, masks, weights):
         return acc.astype(prev.dtype)
 
     return jax.tree.map(combine, prev_master, *clients, *masks)
+
+
+def fill_aggregate_stacked(prev_master: Params,
+                           chunks: Sequence[Tuple[Params, Any, np.ndarray]],
+                           mask_fn: Callable) -> Params:
+    """Batched Algorithm 3 for the vmap execution backend.
+
+    ``chunks`` holds stacked uploads: each entry is ``(stacked_params,
+    keys, weights)`` where every leaf of ``stacked_params`` carries a
+    leading (P,) upload axis, ``keys`` is (P, num_blocks) int32 and
+    ``weights`` is (P,).  Trained masks are derived inside the jitted body
+    via ``vmap(mask_fn)``, so one dispatch per chunk replaces the
+    per-upload Python loop of ``fill_aggregate`` (its oracle).
+    """
+    total = float(sum(float(np.sum(w)) for _, _, w in chunks))
+    acc = None
+    for stacked, keys, w in chunks:
+        wnorm = jnp.asarray(np.asarray(w, np.float32) / total)
+        part = _fill_stacked_partial(prev_master, stacked,
+                                     jnp.asarray(keys, jnp.int32), wnorm,
+                                     mask_fn=mask_fn)
+        acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+    return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, prev_master)
+
+
+@functools.partial(jax.jit, static_argnames=("mask_fn",))
+def _fill_stacked_partial(prev_master, stacked, keys, wnorm, mask_fn):
+    masks = jax.vmap(mask_fn)(stacked, keys)
+
+    def combine(prev, cp, m):
+        m = m.astype(jnp.float32)
+        m = m.reshape(m.shape + (1,) * (cp.ndim - m.ndim))
+        filled = (m * cp.astype(jnp.float32)
+                  + (1 - m) * prev.astype(jnp.float32)[None])
+        w = wnorm.reshape((-1,) + (1,) * (cp.ndim - 1))
+        return jnp.sum(w * filled, axis=0)
+
+    return jax.tree.map(combine, prev_master, stacked, masks)
 
 
 def fedavg(uploads: Sequence[Tuple[Params, float]]) -> Params:

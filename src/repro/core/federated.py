@@ -8,7 +8,6 @@ this is what makes the search real-time on the server.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
@@ -23,12 +22,14 @@ from repro.optim import sgd_init, sgd_update
 Params = Any
 
 
-def make_client_update(api: SupernetAPI, epochs: int = 1,
-                       momentum: float = 0.5) -> Callable:
-    """Client k update (Algorithm 4 lines 57-68): E epochs of minibatch SGD
-    from the downloaded (weight-inherited) master, on the selected subnet."""
+def client_update_fn(api: SupernetAPI, epochs: int = 1,
+                     momentum: float = 0.5) -> Callable:
+    """Un-jitted client update body: E epochs of minibatch SGD from the
+    downloaded (weight-inherited) master, on the selected subnet
+    (Algorithm 4 lines 57-68).  The vmap execution backend maps this over
+    stacked (individual, client) pairs; ``make_client_update`` is the
+    jitted single-pair form."""
 
-    @jax.jit
     def update(params: Params, key: jax.Array, xb, yb, lr):
         vel = sgd_init(params)
 
@@ -49,10 +50,15 @@ def make_client_update(api: SupernetAPI, epochs: int = 1,
     return update
 
 
-def make_evaluator(api: SupernetAPI) -> Callable:
-    """Test-error counter over a client's pre-batched test shard."""
+def make_client_update(api: SupernetAPI, epochs: int = 1,
+                       momentum: float = 0.5) -> Callable:
+    """Jit-compiled client update (one (individual, client) pair per call)."""
+    return jax.jit(client_update_fn(api, epochs, momentum))
 
-    @jax.jit
+
+def eval_count_fn(api: SupernetAPI) -> Callable:
+    """Un-jitted error counter over a client's pre-batched test shard."""
+
     def evaluate(params: Params, key: jax.Array, xb, yb):
         def one(acc, batch):
             x, y = batch
@@ -61,6 +67,11 @@ def make_evaluator(api: SupernetAPI) -> Callable:
         return errs
 
     return evaluate
+
+
+def make_evaluator(api: SupernetAPI) -> Callable:
+    """Jit-compiled test-error counter (one (key, client) pair per call)."""
+    return jax.jit(eval_count_fn(api))
 
 
 def weighted_test_error(evaluate, params, key, clients: Sequence[ClientDataset]

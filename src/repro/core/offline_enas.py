@@ -1,95 +1,25 @@
 """Offline federated evolutionary NAS — the paper's comparison baseline
 (Section IV.G, following Zhu & Jin 2019 [7]).
 
-Differences from the real-time method, reproduced faithfully:
-  * every offspring model is REINITIALIZED and trained from scratch;
-  * every client trains EVERY individual (N training passes per client per
-    generation, vs 1 for the real-time method);
-  * each individual is a standalone model aggregated with plain FedAvg —
-    there is no shared master, no fill-aggregation, no weight inheritance.
+Compatibility shim over ``repro.engine`` (``FedEngine`` + ``OfflineNas``
+strategy): every offspring model is REINITIALIZED and trained from
+scratch, every client trains EVERY individual, and each individual is a
+standalone model aggregated with plain FedAvg — no shared master, no
+fill-aggregation, no weight inheritance.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
-import jax
-import numpy as np
-
-from repro.core import choice, nsga2
-from repro.core.aggregate import fedavg
-from repro.core.double_sampling import sample_participants, \
-    sample_population_keys
-from repro.core.federated import make_client_update, make_evaluator, \
-    weighted_test_error
-from repro.core.rt_enas import BYTES_PER_PARAM, CommStats, RunConfig
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientDataset
-from repro.optim import round_decay
+from repro.engine.types import RunConfig
 
 
 def run(api: SupernetAPI, clients: Sequence[ClientDataset],
         run_cfg: RunConfig) -> Dict:
-    rng = np.random.default_rng(run_cfg.seed)
-    update = make_client_update(api, run_cfg.local_epochs, run_cfg.momentum)
-    evaluate = make_evaluator(api)
-    stats = CommStats()
+    """One-call offline-baseline run (legacy API; history dict kept)."""
+    from repro.engine import FedEngine, OfflineNas
 
-    parents = sample_population_keys(rng, run_cfg.population, api.num_blocks)
-    parent_objs = None
-    history: Dict[str, List] = {"gen": [], "objs": [], "parent_keys": [],
-                                "best_err": [], "down_gb": [], "up_gb": [],
-                                "train_passes": [], "wall_s": []}
-    t0 = time.time()
-    reinit_seed = 1000
-
-    def train_and_eval(keys, participants, lr):
-        nonlocal reinit_seed
-        objs = []
-        part_clients = [clients[int(i)] for i in participants]
-        for key in keys:
-            reinit_seed += 1
-            # REINITIALIZED from scratch — the paper's central criticism
-            params = api.init(jax.random.PRNGKey(reinit_seed))
-            payload = api.payload_params(key)
-            jkey = np.asarray(key, np.int32)
-            uploads = []
-            for c in part_clients:                      # every client trains
-                stats.add_download(payload)
-                xb, yb = c.train
-                uploads.append((update(params, jkey, xb, yb, lr), c.weight))
-                stats.add_upload(payload)
-                stats.client_train_passes += 1
-            params = fedavg(uploads)
-            stats.add_download(payload, copies=len(part_clients))  # for eval
-            err = weighted_test_error(evaluate, params, jkey, part_clients)
-            objs.append([err, api.flops(key)])
-        return np.asarray(objs, dtype=float)
-
-    for gen in range(1, run_cfg.generations + 1):
-        lr = float(round_decay(run_cfg.lr0, run_cfg.lr_decay, gen - 1))
-        participants = sample_participants(rng, len(clients),
-                                           run_cfg.participation)
-        if parent_objs is None:
-            parent_objs = train_and_eval(parents, participants, lr)
-        offspring = choice.make_offspring(rng, parents, run_cfg.population,
-                                          run_cfg.crossover, run_cfg.mutation)
-        off_objs = train_and_eval(offspring, participants, lr)
-
-        combined = list(parents) + list(offspring)
-        objs = np.concatenate([parent_objs, off_objs], axis=0)
-        sel = nsga2.select(objs, run_cfg.population)
-        parents = [combined[i] for i in sel]
-        parent_objs = objs[sel]
-
-        history["gen"].append(gen)
-        history["objs"].append(objs)
-        history["parent_keys"].append([k.copy() for k in parents])
-        history["best_err"].append(float(objs[sel][:, 0].min()))
-        history["down_gb"].append(stats.down_bytes / 1e9)
-        history["up_gb"].append(stats.up_bytes / 1e9)
-        history["train_passes"].append(stats.client_train_passes)
-        history["wall_s"].append(time.time() - t0)
-
-    history["stats"] = stats
-    return history
+    return FedEngine(api, clients, run_cfg,
+                     strategy=OfflineNas()).run().history()

@@ -1,164 +1,42 @@
 """Real-time federated evolutionary NAS — the paper's Algorithm 4.
 
-One NSGA-II generation == one federated communication round:
+Compatibility shim: the round loop now lives in ``repro.engine``
+(``FedEngine`` + ``RealTimeNas`` strategy + a pluggable execution
+backend).  ``run`` keeps the pre-engine signature and returns the same
+history dict; new code should use ``repro.engine.FedEngine`` directly,
+which also exposes the vectorized ``backend="vmap"`` execution path and a
+typed ``RoundReport`` history.
 
-  t == 1: train parent sub-models (double-sampled), fill-aggregate;
-  every t: breed offspring keys, train offspring sub-models (weights
-  inherited from the master — never reinitialized), fill-aggregate,
-  evaluate all 2N sub-models on every participating client (master +
-  choice keys downloaded once), NSGA-II environmental selection.
-
-Communication and client-compute costs are accounted per round so the
-paper's efficiency claims (Section IV.G) can be validated quantitatively.
+``RunConfig`` and ``CommStats`` are re-exported from
+``repro.engine.types`` (their new home).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
-import jax
-import numpy as np
-
-from repro.core import choice, nsga2
-from repro.core.aggregate import fill_aggregate
-from repro.core.double_sampling import (
-    sample_client_groups, sample_participants, sample_population_keys,
-)
-from repro.core.federated import make_client_update, make_evaluator, \
-    weighted_test_error
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientDataset
-from repro.optim import round_decay
-
-BYTES_PER_PARAM = 4
-
-
-@dataclasses.dataclass
-class RunConfig:
-    population: int = 10
-    generations: int = 500
-    participation: float = 1.0          # C in the paper
-    lr0: float = 0.1
-    lr_decay: float = 0.995
-    momentum: float = 0.5
-    local_epochs: int = 1
-    crossover: float = 0.9
-    mutation: float = 0.1
-    seed: int = 0
-    aggregate_backend: str = "xla"      # 'pallas' routes Algorithm 3 to the kernel
-
-
-@dataclasses.dataclass
-class CommStats:
-    down_bytes: float = 0.0
-    up_bytes: float = 0.0
-    client_train_passes: int = 0
-
-    def add_download(self, params: int, copies: int = 1):
-        self.down_bytes += BYTES_PER_PARAM * params * copies
-
-    def add_upload(self, params: int, copies: int = 1):
-        self.up_bytes += BYTES_PER_PARAM * params * copies
-
-
-def _train_generation(api: SupernetAPI, master, keys, groups,
-                      clients: Sequence[ClientDataset], update, lr,
-                      stats: CommStats, run_cfg: RunConfig,
-                      download_models: bool):
-    """Train each individual's sub-model on its client group and
-    fill-aggregate the uploads into the master (Algorithm 3)."""
-    uploads = []
-    for key, group in zip(keys, groups):
-        payload = api.payload_params(key)
-        jkey = np.asarray(key, np.int32)
-        for cid in group:
-            c = clients[int(cid)]
-            if download_models:
-                stats.add_download(payload)      # theta^q + key (t == 1)
-            xb, yb = c.train
-            p_k = update(master, jkey, xb, yb, lr)
-            mask = api.trained_mask(p_k, key)
-            uploads.append((p_k, mask, c.weight))
-            stats.add_upload(payload)
-            stats.client_train_passes += 1
-    if uploads:
-        master = fill_aggregate(master, uploads,
-                                backend=run_cfg.aggregate_backend)
-    return master
+from repro.engine.types import BYTES_PER_PARAM, CommStats, RunConfig  # noqa: F401 (compat re-exports)
 
 
 def run(api: SupernetAPI, clients: Sequence[ClientDataset],
         run_cfg: RunConfig,
         callback: Optional[Callable[[int, Dict], None]] = None) -> Dict:
-    rng = np.random.default_rng(run_cfg.seed)
-    master = api.init(jax.random.PRNGKey(run_cfg.seed))
-    update = make_client_update(api, run_cfg.local_epochs, run_cfg.momentum)
-    evaluate = make_evaluator(api)
-    stats = CommStats()
-    master_size = api.master_params()
+    """One-call Algorithm 4 run (legacy API; history dict layout kept)."""
+    from repro.engine import FedEngine, RealTimeNas
+    from repro.engine.types import append_report
 
-    parents = sample_population_keys(rng, run_cfg.population, api.num_blocks)
-    history: Dict[str, List] = {"gen": [], "objs": [], "parent_keys": [],
-                                "best_err": [], "knee_err": [], "best_key": [],
-                                "knee_key": [], "down_gb": [], "up_gb": [],
-                                "train_passes": [], "wall_s": []}
-    t0 = time.time()
+    engine = FedEngine(api, clients, run_cfg, strategy=RealTimeNas())
+    # like the legacy loop, the dict handed to the callback each round IS
+    # the returned history, gaining final_master/stats after the last round
+    live: Dict = {}
 
-    for gen in range(1, run_cfg.generations + 1):
-        lr = float(round_decay(run_cfg.lr0, run_cfg.lr_decay, gen - 1))
-        participants = sample_participants(rng, len(clients),
-                                           run_cfg.participation)
+    def cb(gen, report):
+        append_report(live, report)
+        if callback is not None:
+            callback(gen, live)
 
-        # --- t == 1 only: train the parent sub-models (Algorithm 4 l.15-26)
-        if gen == 1:
-            groups = sample_client_groups(rng, participants,
-                                          run_cfg.population)
-            master = _train_generation(api, master, parents, groups, clients,
-                                       update, lr, stats, run_cfg,
-                                       download_models=True)
-
-        # --- offspring: inherit weights, never reinitialize (l.27-41)
-        offspring = choice.make_offspring(rng, parents, run_cfg.population,
-                                          run_cfg.crossover, run_cfg.mutation)
-        groups = sample_client_groups(rng, participants, run_cfg.population)
-        master = _train_generation(api, master, offspring, groups, clients,
-                                   update, lr, stats, run_cfg,
-                                   download_models=(gen == 1))
-
-        # --- fitness: master + all 2N keys to every participant (l.43-49)
-        combined = list(parents) + list(offspring)
-        stats.add_download(master_size, copies=len(participants))
-        part_clients = [clients[int(i)] for i in participants]
-        errs = np.array([weighted_test_error(evaluate, master,
-                                             np.asarray(k, np.int32),
-                                             part_clients)
-                         for k in combined])
-        fl = np.array([api.flops(k) for k in combined], dtype=float)
-        objs = np.stack([errs, fl], axis=1)
-
-        # --- NSGA-II environmental selection (l.50-53)
-        sel = nsga2.select(objs, run_cfg.population)
-        parents = [combined[i] for i in sel]
-
-        front0 = nsga2.fast_non_dominated_sort(objs[sel])[0]
-        knee_local = nsga2.knee_point(objs[sel], front0)
-        best_local = sel[int(np.argmin(objs[sel][:, 0]))]
-
-        history["gen"].append(gen)
-        history["objs"].append(objs)
-        history["parent_keys"].append([k.copy() for k in parents])
-        history["best_err"].append(float(objs[best_local, 0]))
-        history["best_key"].append(combined[best_local].copy())
-        history["knee_err"].append(float(objs[sel][knee_local, 0]))
-        history["knee_key"].append(combined[sel[knee_local]].copy())
-        history["down_gb"].append(stats.down_bytes / 1e9)
-        history["up_gb"].append(stats.up_bytes / 1e9)
-        history["train_passes"].append(stats.client_train_passes)
-        history["wall_s"].append(time.time() - t0)
-        if callback:
-            callback(gen, history)
-
-    history["final_master"] = master
-    history["stats"] = stats
-    return history
+    result = engine.run(callback=cb)
+    live.update(result.extras)
+    live["stats"] = result.stats
+    return live

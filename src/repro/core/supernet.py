@@ -17,11 +17,17 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import aggregate, flops
+from repro.core.choice import BITS_PER_BLOCK
 from repro.models import cnn
 from repro.models import transformer as tr
 from repro.models.layers import cross_entropy
 
 Params = Any
+
+
+def choice_key_bytes(num_blocks: int) -> int:
+    """Wire size of one choice key: 2 bits per choice block, byte-padded."""
+    return (num_blocks * BITS_PER_BLOCK + 7) // 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +41,7 @@ class SupernetAPI:
     flops: Callable[[np.ndarray], float]
     payload_params: Callable[[np.ndarray], int]
     master_params: Callable[[], int]
+    key_bytes: int = 0    # wire size of one choice key (2 bits per block)
 
 
 def cnn_supernet_api(cfg: ModelConfig) -> SupernetAPI:
@@ -76,7 +83,8 @@ def cnn_supernet_api(cfg: ModelConfig) -> SupernetAPI:
         error_count=error_count,
         trained_mask=aggregate.cnn_trained_mask,
         flops=lambda key: float(flops.cnn_subnet_macs(key, cfg.num_layers)),
-        payload_params=payload, master_params=_master_params)
+        payload_params=payload, master_params=_master_params,
+        key_bytes=choice_key_bytes(cfg.num_layers))
 
 
 def lm_supernet_api(cfg: ModelConfig) -> SupernetAPI:
@@ -107,7 +115,8 @@ def lm_supernet_api(cfg: ModelConfig) -> SupernetAPI:
         trained_mask=aggregate.supernet_trained_mask,
         flops=subnet_flops,
         payload_params=lambda key: flops.subnet_params(cfg, key),
-        master_params=_master_params)
+        master_params=_master_params,
+        key_bytes=choice_key_bytes(cfg.num_layers))
 
 
 def make_api(cfg: ModelConfig) -> SupernetAPI:

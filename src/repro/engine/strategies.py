@@ -1,0 +1,228 @@
+"""Federated search strategies: what differs between the paper's
+Algorithms 1/4 and the offline baseline, and nothing else.
+
+The engine owns participant sampling, the lr schedule, comm accounting
+totals and the round loop; the execution backend owns how local SGD and
+evaluation are dispatched.  A strategy only sequences the round:
+
+  * ``RealTimeNas``   — Algorithm 4: weight-inherited sub-models,
+    fill-aggregation into one shared master, 2N-wide fitness evaluation,
+    NSGA-II environmental selection.  One training pass per client per
+    generation (the paper's real-time claim).
+  * ``OfflineNas``    — the Zhu & Jin 2019 baseline: every offspring is
+    reinitialized, every client trains every individual, plain FedAvg per
+    individual, no shared master.
+  * ``FedAvgBaseline``— Algorithm 1 on a fixed architecture (the paper's
+    ResNet18 role in Table IV).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol
+
+import jax
+import numpy as np
+
+from repro.core.choice import make_offspring
+from repro.core.double_sampling import sample_client_groups, \
+    sample_population_keys
+from repro.core.nsga2 import fast_non_dominated_sort, knee_point, select
+from repro.engine.types import BYTES_PER_PARAM, ERROR_COUNT_BYTES, \
+    RoundReport
+
+
+class Strategy(Protocol):
+    name: str
+
+    def setup(self, engine) -> None: ...
+
+    def round(self, engine, gen: int, participants: np.ndarray,
+              lr: float) -> RoundReport: ...
+
+    def extras(self, engine) -> Dict: ...
+
+
+def _account_train(engine, keys, groups, download_models: bool):
+    """Training-phase traffic of one fill-aggregated generation: payload
+    down (t == 1 only — later rounds inherit weights already on device),
+    payload up, one local pass per (individual, client) pair."""
+    stats, api = engine.stats, engine.api
+    for key, group in zip(keys, groups):
+        payload = api.payload_params(key)
+        for _ in group:
+            if download_models:
+                stats.add_download(payload)      # theta^q + key (t == 1)
+            stats.add_upload(payload)
+            stats.client_train_passes += 1
+
+
+def _account_eval(engine, n_keys: int, n_participants: int,
+                  master_params: Optional[int] = None):
+    """Fitness-phase traffic (Section IV.G): the master download (real-time
+    method only), the n_keys choice-key downloads, and one error-count
+    upload per (key, client) pair."""
+    stats, api = engine.stats, engine.api
+    if master_params is not None:
+        stats.add_eval_download_bytes(BYTES_PER_PARAM * master_params,
+                                      copies=n_participants)
+    stats.add_eval_download_bytes(api.key_bytes * n_keys,
+                                  copies=n_participants)
+    stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * n_keys,
+                                copies=n_participants)
+
+
+class RealTimeNas:
+    """The paper's Algorithm 4 (one NSGA-II generation == one round)."""
+
+    name = "realtime"
+
+    def __init__(self):
+        self.master = None
+        self.parents: List[np.ndarray] = []
+
+    def setup(self, engine):
+        cfg = engine.cfg
+        self.master = engine.api.init(jax.random.PRNGKey(cfg.seed))
+        self.parents = sample_population_keys(engine.rng, cfg.population,
+                                              engine.api.num_blocks)
+
+    def round(self, engine, gen, participants, lr):
+        cfg, api, backend = engine.cfg, engine.api, engine.backend
+
+        # --- t == 1 only: train the parent sub-models (Algorithm 4 l.15-26)
+        if gen == 1:
+            groups = sample_client_groups(engine.rng, participants,
+                                          cfg.population)
+            _account_train(engine, self.parents, groups, download_models=True)
+            self.master = backend.train_fill(self.master, self.parents,
+                                             groups, lr)
+
+        # --- offspring: inherit weights, never reinitialize (l.27-41)
+        offspring = make_offspring(engine.rng, self.parents, cfg.population,
+                                   cfg.crossover, cfg.mutation)
+        groups = sample_client_groups(engine.rng, participants,
+                                      cfg.population)
+        _account_train(engine, offspring, groups,
+                       download_models=(gen == 1))
+        self.master = backend.train_fill(self.master, offspring, groups, lr)
+
+        # --- fitness: master + all 2N keys to every participant (l.43-49)
+        combined = list(self.parents) + list(offspring)
+        _account_eval(engine, len(combined), len(participants),
+                      master_params=api.master_params())
+        errs = backend.eval_shared(self.master, combined, participants)
+        fl = np.array([api.flops(k) for k in combined], dtype=float)
+        objs = np.stack([errs, fl], axis=1)
+
+        # --- NSGA-II environmental selection (l.50-53)
+        sel = select(objs, cfg.population)
+        self.parents = [combined[i] for i in sel]
+        front0 = fast_non_dominated_sort(objs[sel])[0]
+        knee_local = knee_point(objs[sel], front0)
+        best_local = sel[int(np.argmin(objs[sel][:, 0]))]
+
+        return RoundReport(
+            gen=gen, objs=objs,
+            parent_keys=[k.copy() for k in self.parents],
+            best_err=float(objs[best_local, 0]),
+            best_key=combined[best_local].copy(),
+            knee_err=float(objs[sel][knee_local, 0]),
+            knee_key=combined[sel[knee_local]].copy())
+
+    def extras(self, engine):
+        return {"final_master": self.master}
+
+
+class OfflineNas:
+    """Offline evolutionary federated NAS (Zhu & Jin 2019): reinitialized
+    individuals, every client trains every individual, per-individual
+    FedAvg — the paper's Section IV.G cost comparison baseline."""
+
+    name = "offline"
+
+    def __init__(self):
+        self.parents: List[np.ndarray] = []
+        self.parent_objs: Optional[np.ndarray] = None
+        self._reinit_seed = 1000
+
+    def setup(self, engine):
+        self.parents = sample_population_keys(engine.rng,
+                                              engine.cfg.population,
+                                              engine.api.num_blocks)
+        self.parent_objs = None
+        self._reinit_seed = 1000
+
+    def _train_and_eval(self, engine, keys, participants, lr):
+        api, stats, backend = engine.api, engine.stats, engine.backend
+        m = len(participants)
+        inits = []
+        for _ in keys:
+            self._reinit_seed += 1
+            # REINITIALIZED from scratch — the paper's central criticism
+            inits.append(api.init(jax.random.PRNGKey(self._reinit_seed)))
+        payloads = [api.payload_params(k) for k in keys]
+        for payload in payloads:                 # every client trains
+            stats.add_download(payload, copies=m)
+            stats.add_upload(payload, copies=m)
+            stats.client_train_passes += m
+        models = backend.train_fedavg_population(inits, keys,
+                                                 participants, lr)
+        for payload in payloads:                 # aggregated model for eval
+            stats.add_eval_download_bytes(BYTES_PER_PARAM * payload,
+                                          copies=m)
+        stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * len(keys), copies=m)
+        errs = backend.eval_paired(models, keys, participants)
+        fl = [api.flops(k) for k in keys]
+        return np.stack([errs, np.asarray(fl, dtype=float)], axis=1)
+
+    def round(self, engine, gen, participants, lr):
+        cfg = engine.cfg
+        if self.parent_objs is None:
+            self.parent_objs = self._train_and_eval(engine, self.parents,
+                                                    participants, lr)
+        offspring = make_offspring(engine.rng, self.parents, cfg.population,
+                                   cfg.crossover, cfg.mutation)
+        off_objs = self._train_and_eval(engine, offspring, participants, lr)
+
+        combined = list(self.parents) + list(offspring)
+        objs = np.concatenate([self.parent_objs, off_objs], axis=0)
+        sel = select(objs, cfg.population)
+        self.parents = [combined[i] for i in sel]
+        self.parent_objs = objs[sel]
+
+        return RoundReport(
+            gen=gen, objs=objs,
+            parent_keys=[k.copy() for k in self.parents],
+            best_err=float(objs[sel][:, 0].min()))
+
+    def extras(self, engine):
+        return {}
+
+
+class FedAvgBaseline:
+    """Algorithm 1 on one fixed choice key (the ResNet18 role)."""
+
+    name = "fedavg"
+
+    def __init__(self, key: np.ndarray):
+        self.key = np.asarray(key, np.int32)
+        self.params = None
+
+    def setup(self, engine):
+        self.params = engine.api.init(jax.random.PRNGKey(engine.cfg.seed))
+
+    def round(self, engine, gen, participants, lr):
+        stats, api, backend = engine.stats, engine.api, engine.backend
+        m = len(participants)
+        payload = api.payload_params(self.key)
+        stats.add_download(payload, copies=m)
+        stats.add_upload(payload, copies=m)
+        stats.client_train_passes += m
+        self.params = backend.train_fedavg(self.params, self.key,
+                                           participants, lr)
+        _account_eval(engine, 1, m, master_params=payload)
+        err = backend.eval_shared(self.params, [self.key], participants)[0]
+        return RoundReport(gen=gen, best_err=float(err))
+
+    def extras(self, engine):
+        return {"params": self.params,
+                "flops": engine.api.flops(self.key)}

@@ -1,0 +1,114 @@
+"""Typed state shared by every federated NAS runtime.
+
+``CommStats`` (moved here from ``repro.core.rt_enas``) accounts both the
+training-phase traffic (sub-model downloads/uploads, Algorithm 3/4) and the
+evaluation-phase traffic the paper's Section IV.G comparison needs: the 2N
+choice-key downloads before fitness evaluation and the per-client
+error-count uploads afterwards.  ``RoundReport`` is the typed per-round
+history record every strategy produces; ``history_dict`` flattens a list of
+reports into the legacy dict-of-lists layout that ``rt_enas.run`` /
+``offline_enas.run`` used to return.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+BYTES_PER_PARAM = 4        # float32 payloads
+ERROR_COUNT_BYTES = 4      # one int32 error count per evaluated sub-model
+
+
+@dataclasses.dataclass
+class RunConfig:
+    population: int = 10
+    generations: int = 500
+    participation: float = 1.0          # C in the paper
+    lr0: float = 0.1
+    lr_decay: float = 0.995
+    momentum: float = 0.5
+    local_epochs: int = 1
+    crossover: float = 0.9
+    mutation: float = 0.1
+    seed: int = 0
+    aggregate_backend: str = "xla"      # 'pallas' routes Algorithm 3 to the kernel
+    backend: str = "loop"               # execution backend: 'loop' | 'vmap'
+    vmap_eval_tile: int = 32            # clients vmapped per eval scan step
+
+
+@dataclasses.dataclass
+class CommStats:
+    down_bytes: float = 0.0
+    up_bytes: float = 0.0
+    client_train_passes: int = 0
+    eval_down_bytes: float = 0.0        # subset of down_bytes (fitness phase)
+    eval_up_bytes: float = 0.0          # subset of up_bytes (fitness phase)
+
+    def add_download(self, params: int, copies: int = 1):
+        self.down_bytes += BYTES_PER_PARAM * params * copies
+
+    def add_upload(self, params: int, copies: int = 1):
+        self.up_bytes += BYTES_PER_PARAM * params * copies
+
+    def add_eval_download_bytes(self, nbytes: float, copies: int = 1):
+        self.down_bytes += nbytes * copies
+        self.eval_down_bytes += nbytes * copies
+
+    def add_eval_upload_bytes(self, nbytes: float, copies: int = 1):
+        self.up_bytes += nbytes * copies
+        self.eval_up_bytes += nbytes * copies
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """One federated round (== one NSGA-II generation for the NAS
+    strategies).  Search fields a strategy does not produce stay ``None``
+    and are dropped from the legacy history dict."""
+    gen: int
+    objs: Optional[np.ndarray] = None          # (2N, 2) [err, flops]
+    parent_keys: Optional[List[np.ndarray]] = None
+    best_err: Optional[float] = None
+    best_key: Optional[np.ndarray] = None
+    knee_err: Optional[float] = None
+    knee_key: Optional[np.ndarray] = None
+    # stamped by the engine after the strategy returns:
+    down_gb: float = 0.0
+    up_gb: float = 0.0
+    train_passes: int = 0
+    wall_s: float = 0.0
+
+
+HISTORY_FIELDS = ("gen", "objs", "parent_keys", "best_err", "knee_err",
+                  "best_key", "knee_key", "down_gb", "up_gb",
+                  "train_passes", "wall_s")
+
+
+def append_report(hist: Dict[str, list], report: RoundReport) -> None:
+    """Append one round to a legacy dict-of-lists history in place
+    (fields the strategy does not produce are dropped)."""
+    for f in HISTORY_FIELDS:
+        v = getattr(report, f)
+        if v is not None:
+            hist.setdefault(f, []).append(v)
+
+
+def history_dict(reports: List[RoundReport]) -> Dict[str, list]:
+    """Legacy dict-of-lists view (keys with all-None values are dropped)."""
+    out: Dict[str, list] = {}
+    for r in reports:
+        append_report(out, r)
+    return out
+
+
+@dataclasses.dataclass
+class EngineResult:
+    reports: List[RoundReport]
+    stats: CommStats
+    extras: Dict
+
+    def history(self) -> Dict:
+        out = history_dict(self.reports)
+        out.update(self.extras)
+        out["stats"] = self.stats
+        return out

@@ -1,0 +1,75 @@
+"""Fixed-seed fallback for ``hypothesis`` so the property-based tests
+degrade to deterministic example-based tests when the real library is not
+installed (it is declared in pyproject's test extra).
+
+Implements just the surface this repo's tests use: ``given``, ``settings``
+and the ``integers`` / ``floats`` / ``lists`` / ``tuples`` strategies with
+``.map`` / ``.flatmap``.  Examples are drawn from one seeded generator, so
+failures reproduce exactly; there is no shrinking.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_FALLBACK_SEED = 20200303          # arXiv:2003.02793
+_MAX_EXAMPLES_CAP = 25             # keep the degraded mode fast
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.draw(rng)))
+
+    def flatmap(self, fn):
+        return _Strategy(lambda rng: fn(self.draw(rng)).draw(rng))
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=False, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.draw(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+def tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+
+strategies = types.SimpleNamespace(integers=integers, floats=floats,
+                                   lists=lists, tuples=tuples)
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            n = min(getattr(wrapper, "_fallback_max_examples", 20),
+                    _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(_FALLBACK_SEED)
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strats))
+        # deliberately no functools.wraps: the wrapper must expose a
+        # zero-arg signature or pytest treats the strategy-filled
+        # parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

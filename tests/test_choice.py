@@ -1,6 +1,9 @@
 """Choice-key encoding + genetic-operator property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to fixed-seed examples
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core import choice
 

@@ -1,7 +1,10 @@
 """Federated data partitioner invariants (hypothesis) + pipeline shapes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to fixed-seed examples
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.data import (
     ClientDataset, batched, make_classification, make_clients, make_lm_stream,

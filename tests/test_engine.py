@@ -1,0 +1,281 @@
+"""FedEngine: strategy x execution-backend matrix.
+
+Backend parity ("loop" vs "vmap") on the smoke CIFAR supernet: identical
+CommStats, per-generation test errors, and master params within 1e-5;
+batched fill-aggregation against the per-upload oracle; evaluation-phase
+communication accounting; ClientBatch stacking invariants; and the legacy
+``rt_enas.run`` / ``offline_enas.run`` shims.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_api, offline_enas, rt_enas
+from repro.core.aggregate import fill_aggregate, fill_aggregate_stacked
+from repro.data import make_classification, make_clients, partition_iid
+from repro.data.pipeline import ClientBatch, shape_buckets
+from repro.engine import (
+    BYTES_PER_PARAM, ERROR_COUNT_BYTES, FedAvgBaseline, FedEngine,
+    OfflineNas, RealTimeNas, RunConfig,
+)
+
+
+def tiny_clients(num_clients=8, n=480, seed=0):
+    x, y = make_classification(seed, n, image=8, signal=1.5, noise=0.5)
+    return make_clients(x, y, partition_iid(seed, n, num_clients),
+                        batch=20, test_batch=20)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+def max_leaf_diff(a, b):
+    return max(float(jnp.abs(jnp.asarray(x) - jnp.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rt_parity(api):
+    clients = tiny_clients()
+    out = {}
+    for bk in ("loop", "vmap"):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=4, generations=2, seed=0,
+                                  lr0=0.01, backend=bk))
+        out[bk] = (eng.run(), eng.backend.dispatches)
+    return out
+
+
+def test_rt_backends_same_master(rt_parity):
+    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
+    assert max_leaf_diff(loop.extras["final_master"],
+                         vmap.extras["final_master"]) <= 1e-5
+
+
+def test_rt_backends_same_errors_per_generation(rt_parity):
+    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
+    for a, b in zip(loop.reports, vmap.reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+        assert a.best_err == pytest.approx(b.best_err, abs=1e-5)
+
+
+def test_rt_backends_same_comm_stats(rt_parity):
+    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
+    assert dataclasses.asdict(loop.stats) == dataclasses.asdict(vmap.stats)
+
+
+def test_vmap_dispatches_are_constant_in_clients(api):
+    """The vectorized backend's dispatch count must not grow with the
+    number of participating clients (the loop backend's does)."""
+    counts = {}
+    for m in (4, 8):
+        eng = FedEngine(api, tiny_clients(num_clients=m, n=240 * m // 4),
+                        RunConfig(population=4, generations=1, seed=0,
+                                  backend="vmap"))
+        eng.run()
+        counts[m] = eng.backend.dispatches
+    assert counts[4] == counts[8]
+    eng = FedEngine(api, tiny_clients(num_clients=8),
+                    RunConfig(population=4, generations=1, seed=0,
+                              backend="loop"))
+    eng.run()
+    assert eng.backend.dispatches > 3 * counts[8]
+
+
+def test_offline_backend_parity(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    out = {}
+    for bk in ("loop", "vmap"):
+        out[bk] = FedEngine(api, clients,
+                            RunConfig(population=3, generations=1, seed=1,
+                                      lr0=0.01, backend=bk),
+                            strategy=OfflineNas()).run()
+    np.testing.assert_allclose(out["loop"].reports[0].objs,
+                               out["vmap"].reports[0].objs, atol=1e-5)
+    assert dataclasses.asdict(out["loop"].stats) == \
+        dataclasses.asdict(out["vmap"].stats)
+
+
+def test_fedavg_baseline_backend_parity(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    key = np.array([1, 0, 2, 3], np.int32)
+    out = {}
+    for bk in ("loop", "vmap"):
+        out[bk] = FedEngine(api, clients,
+                            RunConfig(generations=2, seed=0, lr0=0.01,
+                                      backend=bk),
+                            strategy=FedAvgBaseline(key)).run()
+    assert max_leaf_diff(out["loop"].extras["params"],
+                         out["vmap"].extras["params"]) <= 1e-5
+    errs_l = [r.best_err for r in out["loop"].reports]
+    errs_v = [r.best_err for r in out["vmap"].reports]
+    np.testing.assert_allclose(errs_l, errs_v, atol=1e-5)
+
+
+def test_vmap_rejects_pallas_aggregate(api):
+    with pytest.raises(ValueError, match="pallas"):
+        FedEngine(api, tiny_clients(num_clients=4, n=240),
+                  RunConfig(backend="vmap", aggregate_backend="pallas"))
+
+
+def test_engine_run_is_reentrant(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    eng = FedEngine(api, clients,
+                    RunConfig(population=2, generations=1, seed=5),
+                    strategy=OfflineNas())
+    first = eng.run()
+    passes = first.stats.client_train_passes
+    second = eng.run()
+    assert [r.gen for r in second.reports] == [1]
+    assert second.stats.client_train_passes == passes
+    np.testing.assert_array_equal(first.reports[0].objs,
+                                  second.reports[0].objs)
+
+
+# ---------------------------------------------------------------------------
+# batched fill-aggregation vs the per-upload oracle
+# ---------------------------------------------------------------------------
+
+def test_fill_aggregate_stacked_matches_oracle(api):
+    master = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    keys = [rng.integers(0, 4, api.num_blocks).astype(np.int32)
+            for _ in range(3)]
+    ups, weights = [], [2.0, 1.0, 0.5]
+    for i, k in enumerate(keys):
+        p = jax.tree.map(
+            lambda x: x + 0.05 * (i + 1) * jnp.ones_like(x), master)
+        ups.append(p)
+    oracle = fill_aggregate(
+        master, [(p, api.trained_mask(p, k), w)
+                 for p, k, w in zip(ups, keys, weights)])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ups)
+    got = fill_aggregate_stacked(
+        master, [(stacked, np.stack(keys),
+                  np.asarray(weights, np.float32))],
+        mask_fn=api.trained_mask)
+    assert max_leaf_diff(oracle, got) <= 1e-5
+
+
+def test_fill_aggregate_stacked_multi_chunk(api):
+    master = api.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(11)
+    keys = [rng.integers(0, 4, api.num_blocks).astype(np.int32)
+            for _ in range(4)]
+    ups = [jax.tree.map(lambda x: x + 0.1 * (i + 1) * jnp.ones_like(x),
+                        master) for i in range(4)]
+    weights = [1.0, 3.0, 2.0, 2.0]
+    oracle = fill_aggregate(
+        master, [(p, api.trained_mask(p, k), w)
+                 for p, k, w in zip(ups, keys, weights)])
+    chunks = []
+    for sl in (slice(0, 2), slice(2, 4)):
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ups[sl])
+        chunks.append((stacked, np.stack(keys[sl]),
+                       np.asarray(weights[sl], np.float32)))
+    got = fill_aggregate_stacked(master, chunks, mask_fn=api.trained_mask)
+    assert max_leaf_diff(oracle, got) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# evaluation-phase communication accounting (Section IV.G completeness)
+# ---------------------------------------------------------------------------
+
+def test_rt_eval_comm_accounted(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    cfg = RunConfig(population=2, generations=1, seed=0)
+    res = FedEngine(api, clients, cfg, strategy=RealTimeNas()).run()
+    m, two_n = len(clients), 2 * cfg.population
+    expect_down = (BYTES_PER_PARAM * api.master_params()
+                   + api.key_bytes * two_n) * m
+    expect_up = ERROR_COUNT_BYTES * two_n * m
+    assert res.stats.eval_down_bytes == expect_down
+    assert res.stats.eval_up_bytes == expect_up
+    # eval traffic is included in the totals
+    assert res.stats.down_bytes > res.stats.eval_down_bytes > 0
+    assert res.stats.up_bytes > res.stats.eval_up_bytes > 0
+
+
+def test_key_bytes_exposed(api):
+    # 4 choice blocks x 2 bits = 1 byte on the wire
+    assert api.key_bytes == (2 * api.num_blocks + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# ClientBatch stacking
+# ---------------------------------------------------------------------------
+
+def test_client_batch_stack_shapes():
+    clients = tiny_clients(num_clients=4, n=240)
+    cb = ClientBatch.stack(clients, split="train")
+    assert cb.xb.shape[0] == 4 and cb.yb.shape[0] == 4
+    assert cb.xb.shape[1:] == clients[0].train[0].shape
+    np.testing.assert_array_equal(cb.client_ids, [0, 1, 2, 3])
+    np.testing.assert_allclose(cb.weights,
+                               [c.weight for c in clients])
+    assert cb.samples_per_shard == (clients[0].train[0].shape[0]
+                                    * clients[0].train[0].shape[1])
+
+
+def test_client_batch_ragged_raises():
+    a = tiny_clients(num_clients=4, n=240)
+    b = tiny_clients(num_clients=2, n=480)   # different shard shapes
+    with pytest.raises(ValueError):
+        ClientBatch.stack([a[0], b[0]], split="train")
+
+
+def test_shape_buckets_order_preserving():
+    shapes = [(2, 5), (3, 5), (2, 5), (3, 5), (2, 5)]
+    assert shape_buckets(shapes) == [[0, 2, 4], [1, 3]]
+
+
+# ---------------------------------------------------------------------------
+# legacy shims
+# ---------------------------------------------------------------------------
+
+def test_rt_enas_shim_matches_engine(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    cfg = RunConfig(population=3, generations=2, seed=2, lr0=0.05)
+    hist = rt_enas.run(api, clients, cfg)
+    res = FedEngine(api, clients, cfg, strategy=RealTimeNas()).run()
+    expect = res.history()
+    assert hist["gen"] == [1, 2]
+    for k in ("gen", "best_err", "knee_err", "down_gb", "up_gb",
+              "train_passes"):
+        assert hist[k] == expect[k], k
+    assert set(hist) >= {"objs", "parent_keys", "best_key", "knee_key",
+                         "wall_s", "final_master", "stats"}
+
+
+def test_rt_enas_shim_callback(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    seen = []
+    hist = rt_enas.run(api, clients,
+                       RunConfig(population=3, generations=2, seed=0),
+                       callback=lambda gen, h: seen.append(
+                           (gen, h["gen"][-1], len(h["gen"]), h)))
+    assert [(g, last, n) for g, last, n, _ in seen] == [(1, 1, 1), (2, 2, 2)]
+    # legacy contract: the callback dict IS the returned history, which
+    # gains final_master/stats after the run completes
+    assert seen[0][3] is hist
+    assert "final_master" in hist and "stats" in hist
+
+
+def test_offline_enas_shim_history_layout(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    hist = offline_enas.run(
+        api, clients, RunConfig(population=2, generations=1, seed=3))
+    assert hist["gen"] == [1]
+    assert "best_key" not in hist and "knee_err" not in hist
+    assert np.isfinite(hist["best_err"]).all()
+    assert hist["stats"].client_train_passes == 2 * 2 * len(clients)
