@@ -7,13 +7,16 @@ see DESIGN.md Section 8 for the simulation boundary.
 
 Everything routes through ``repro.engine.FedEngine``; the
 ``engine_backend`` argument selects the client-execution path ("loop" =
-reference per-pair dispatch, "vmap" = ClientBatch-stacked).  Run
+reference per-pair dispatch, "vmap" = ClientBatch-stacked, "mesh" =
+population sharded over a jax device mesh).  Run
 
     PYTHONPATH=src python benchmarks/fed_nas.py
 
-to compare the two backends on the default cross-device config (many
+to compare the three backends on the default cross-device config (many
 small clients — the axis the loop backend's O(population x clients)
-dispatch count scales with).
+dispatch count scales with).  As a script it forces an 8-way host device
+mesh (``--xla_force_host_platform_device_count=8``) so the mesh backend
+has devices to shard over; equivalently set XLA_FLAGS yourself.
 """
 from __future__ import annotations
 
@@ -21,6 +24,14 @@ import json
 import os
 import time
 from typing import Dict, List, Optional
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    # must happen before the first jax import; library importers
+    # (examples, tests) are left untouched
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import numpy as np
@@ -81,20 +92,39 @@ def run_fixed_baseline(api, clients, rounds: int, key=RESNET_LIKE_KEY,
             "stats": res.stats}
 
 
+def _max_param_diff(a, b) -> float:
+    return float(max(
+        np.abs(np.asarray(p) - np.asarray(q)).max()
+        for p, q in zip(jax.tree.leaves(a.extras["final_master"]),
+                        jax.tree.leaves(b.extras["final_master"]))))
+
+
+def _max_err_diff(a, b) -> float:
+    return float(max(
+        np.abs(np.asarray(x.objs) - np.asarray(y.objs)).max()
+        for x, y in zip(a.reports, b.reports)))
+
+
 def compare_backends(api=None, clients=None, generations: int = 3,
-                     population: int = 6, seed: int = 0) -> Dict:
-    """Same search on both execution backends: wall clock, dispatch
-    counts, and result agreement.  The default client set is the
-    cross-device regime (256 small clients) where the loop backend's
-    O(population x clients) dispatch count is the bottleneck."""
+                     population: int = 6, seed: int = 0,
+                     backends=("loop", "vmap", "mesh")) -> Dict:
+    """Same search on every execution backend: wall clock, dispatch
+    counts, and result agreement (vs the loop reference, plus the
+    mesh-vs-vmap pair the sharded path is certified against).  The
+    default client set is the cross-device regime (256 small clients)
+    where the loop backend's O(population x clients) dispatch count is
+    the bottleneck."""
+    import dataclasses
+
     api = api or build_api()
     if clients is None:
         clients = build_clients(256, iid=True, n=2560, batch=5,
                                 test_batch=5, image=8)
     out: Dict = {"generations": generations, "population": population,
-                 "clients": len(clients)}
+                 "clients": len(clients), "devices": len(jax.devices()),
+                 "backends": list(backends)}
     hists = {}
-    for bk in ("loop", "vmap"):
+    for bk in backends:
         eng = FedEngine(api, clients,
                         RunConfig(population=population,
                                   generations=generations, seed=seed,
@@ -108,17 +138,23 @@ def compare_backends(api=None, clients=None, generations: int = 3,
         out[bk] = {"wall_s": wall, "steady_gen_s": steady,
                    "dispatches": eng.backend.dispatches,
                    "dispatches_per_gen": eng.backend.dispatches / generations}
-    la, va = hists["loop"], hists["vmap"]
-    out["speedup_total"] = out["loop"]["wall_s"] / out["vmap"]["wall_s"]
-    out["speedup_steady"] = (out["loop"]["steady_gen_s"]
-                             / out["vmap"]["steady_gen_s"])
-    out["max_err_diff"] = float(max(
-        np.abs(np.asarray(a.objs) - np.asarray(b.objs)).max()
-        for a, b in zip(la.reports, va.reports)))
-    out["max_param_diff"] = float(max(
-        np.abs(np.asarray(p) - np.asarray(q)).max()
-        for p, q in zip(jax.tree.leaves(la.extras["final_master"]),
-                        jax.tree.leaves(va.extras["final_master"]))))
+    ref = hists[backends[0]]
+    for bk in backends[1:]:
+        out[bk]["max_err_diff"] = _max_err_diff(ref, hists[bk])
+        out[bk]["max_param_diff"] = _max_param_diff(ref, hists[bk])
+    if "vmap" in hists and "mesh" in hists:
+        out["mesh_vs_vmap"] = {
+            "comm_stats_equal": dataclasses.asdict(hists["mesh"].stats)
+            == dataclasses.asdict(hists["vmap"].stats),
+            "max_param_diff": _max_param_diff(hists["vmap"], hists["mesh"]),
+            "max_err_diff": _max_err_diff(hists["vmap"], hists["mesh"]),
+        }
+    if backends[0] == "loop" and "vmap" in hists:  # legacy two-way summary
+        out["speedup_total"] = out["loop"]["wall_s"] / out["vmap"]["wall_s"]
+        out["speedup_steady"] = (out["loop"]["steady_gen_s"]
+                                 / out["vmap"]["steady_gen_s"])
+        out["max_err_diff"] = out["vmap"]["max_err_diff"]
+        out["max_param_diff"] = out["vmap"]["max_param_diff"]
     return out
 
 
@@ -156,7 +192,7 @@ def save_history(path: str, hist: Dict, extra: Optional[Dict] = None):
 def main():
     import argparse
     ap = argparse.ArgumentParser(
-        description="loop vs vmap execution-backend comparison")
+        description="loop vs vmap vs mesh execution-backend comparison")
     ap.add_argument("--generations", type=int, default=3)
     ap.add_argument("--population", type=int, default=6)
     ap.add_argument("--clients", type=int, default=256)
@@ -164,6 +200,9 @@ def main():
     ap.add_argument("--image", type=int, default=8)
     ap.add_argument("--batch", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", nargs="+",
+                    default=["loop", "vmap", "mesh"],
+                    choices=["loop", "vmap", "mesh"])
     args = ap.parse_args()
 
     clients = build_clients(args.clients, iid=True, n=args.samples,
@@ -171,16 +210,27 @@ def main():
                             image=args.image)
     rep = compare_backends(build_api(), clients,
                            generations=args.generations,
-                           population=args.population, seed=args.seed)
-    for bk in ("loop", "vmap"):
+                           population=args.population, seed=args.seed,
+                           backends=tuple(args.backends))
+    print(f"{rep['clients']} clients x {rep['generations']} generations, "
+          f"population {rep['population']}, {rep['devices']} devices")
+    ref = args.backends[0]
+    for bk in args.backends:
         r = rep[bk]
+        agree = (f" | vs {ref}: err {r['max_err_diff']:.1e} "
+                 f"params {r['max_param_diff']:.1e}"
+                 if "max_err_diff" in r else "")
         print(f"{bk:>5}: total {r['wall_s']:7.1f}s | steady "
               f"{r['steady_gen_s']:6.2f}s/gen | "
-              f"{r['dispatches_per_gen']:7.1f} dispatches/gen")
-    print(f"vmap speedup: {rep['speedup_total']:.2f}x total, "
-          f"{rep['speedup_steady']:.2f}x steady-state")
-    print(f"agreement: max err diff {rep['max_err_diff']:.2e}, "
-          f"max master-param diff {rep['max_param_diff']:.2e}")
+              f"{r['dispatches_per_gen']:7.1f} dispatches/gen{agree}")
+    if "speedup_total" in rep:
+        print(f"vmap speedup: {rep['speedup_total']:.2f}x total, "
+              f"{rep['speedup_steady']:.2f}x steady-state")
+    if "mesh_vs_vmap" in rep:
+        mv = rep["mesh_vs_vmap"]
+        print(f"mesh vs vmap: CommStats equal: {mv['comm_stats_equal']} | "
+              f"max err diff {mv['max_err_diff']:.2e} | "
+              f"max master-param diff {mv['max_param_diff']:.2e}")
 
 
 if __name__ == "__main__":

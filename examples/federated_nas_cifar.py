@@ -35,8 +35,11 @@ def main():
     ap.add_argument("--baseline-rounds", type=int, default=0,
                     help="0 = same as --generations")
     ap.add_argument("--engine-backend", default="loop",
-                    choices=["loop", "vmap"],
-                    help="client-execution backend (FedEngine)")
+                    choices=["loop", "vmap", "mesh"],
+                    help="client-execution backend (FedEngine); for "
+                         "'mesh' on a CPU host set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 "
+                         "before launch to get devices to shard over")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="benchmarks/results")
     args = ap.parse_args()

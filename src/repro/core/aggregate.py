@@ -72,6 +72,31 @@ def supernet_trained_mask(params: Params, key: np.ndarray) -> Params:
 # Algorithm 3
 # ---------------------------------------------------------------------------
 
+def _flat_f32(leaves) -> jnp.ndarray:
+    """Flatten leaves into one (P,) float32 vector (kernel layout)."""
+    return jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+
+
+def _flat_mask_f32(mask_leaves, leaves) -> jnp.ndarray:
+    """Flatten mask leaves (scalar- or partially-broadcast) against their
+    parameter leaves into one (P,) float32 vector."""
+    return jnp.concatenate(
+        [jnp.broadcast_to(m, x.shape).reshape(-1).astype(jnp.float32)
+         for m, x in zip(mask_leaves, leaves)])
+
+
+def _unflatten_like(flat, leaves_ref, treedef) -> Params:
+    """Inverse of ``_flat_f32``: slice a (P,) vector back into the
+    reference leaves' shapes and dtypes."""
+    out, off = [], 0
+    for x in leaves_ref:
+        n = x.size
+        out.append(flat[off: off + n].reshape(x.shape).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
 def fill_aggregate(prev_master: Params,
                    uploads: Sequence[Tuple[Params, Params, float]],
                    backend: str = "xla") -> Params:
@@ -82,25 +107,15 @@ def fill_aggregate(prev_master: Params,
     if backend == "pallas":
         from repro.kernels import ops as kops
         leaves_prev, treedef = jax.tree.flatten(prev_master)
-        flat_prev = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
-                                     for x in leaves_prev])
+        flat_prev = _flat_f32(leaves_prev)
         cl, mk = [], []
         for cp, cm, _ in uploads:
             lc = jax.tree.leaves(cp)
-            lm = jax.tree.leaves(cm)
-            cl.append(jnp.concatenate(
-                [x.reshape(-1).astype(jnp.float32) for x in lc]))
-            mk.append(jnp.concatenate(
-                [jnp.broadcast_to(m, x.shape).reshape(-1).astype(jnp.float32)
-                 for m, x in zip(lm, lc)]))
+            cl.append(_flat_f32(lc))
+            mk.append(_flat_mask_f32(jax.tree.leaves(cm), lc))
         ws = jnp.asarray([w / total for _, _, w in uploads], jnp.float32)
         flat = kops.fill_aggregate(jnp.stack(cl), jnp.stack(mk), ws, flat_prev)
-        out, off = [], 0
-        for x in leaves_prev:
-            n = x.size
-            out.append(flat[off: off + n].reshape(x.shape).astype(x.dtype))
-            off += n
-        return jax.tree.unflatten(treedef, out)
+        return _unflatten_like(flat, leaves_prev, treedef)
 
     clients = tuple(cp for cp, _, _ in uploads)
     masks = tuple(cm for _, cm, _ in uploads)
@@ -126,8 +141,9 @@ def _combine_jit(prev_master, clients, masks, weights):
 
 def fill_aggregate_stacked(prev_master: Params,
                            chunks: Sequence[Tuple[Params, Any, np.ndarray]],
-                           mask_fn: Callable) -> Params:
-    """Batched Algorithm 3 for the vmap execution backend.
+                           mask_fn: Callable,
+                           backend: str = "xla") -> Params:
+    """Batched Algorithm 3 for the vmap/mesh execution backends.
 
     ``chunks`` holds stacked uploads: each entry is ``(stacked_params,
     keys, weights)`` where every leaf of ``stacked_params`` carries a
@@ -135,8 +151,17 @@ def fill_aggregate_stacked(prev_master: Params,
     ``weights`` is (P,).  Trained masks are derived inside the jitted body
     via ``vmap(mask_fn)``, so one dispatch per chunk replaces the
     per-upload Python loop of ``fill_aggregate`` (its oracle).
+
+    ``backend="pallas"`` routes the reduction through the
+    ``repro.kernels.fill_aggregate`` TPU kernel on the flattened
+    parameter vector (the same route ``fill_aggregate`` takes); off-TPU
+    the kernel body executes in interpret mode (``kernels.ops.INTERPRET``)
+    so the selection is valid everywhere.  Weight normalization is global
+    across chunks, so per-chunk partial sums compose exactly.
     """
     total = float(sum(float(np.sum(w)) for _, _, w in chunks))
+    if backend == "pallas":
+        return _fill_stacked_pallas(prev_master, chunks, mask_fn, total)
     acc = None
     for stacked, keys, w in chunks:
         wnorm = jnp.asarray(np.asarray(w, np.float32) / total)
@@ -145,6 +170,44 @@ def fill_aggregate_stacked(prev_master: Params,
                                      mask_fn=mask_fn)
         acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
     return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, prev_master)
+
+
+def _fill_stacked_pallas(prev_master: Params, chunks, mask_fn: Callable,
+                         total: float) -> Params:
+    """Kernel route of ``fill_aggregate_stacked``: flatten every chunk to
+    the (m, P) client/mask matrices the Pallas kernel consumes and sum
+    the per-chunk partials (weights are globally normalized, so the
+    kernel's ``sum_k w_k * filled_k`` partials add up to Algorithm 3)."""
+    from repro.kernels import ops as kops
+
+    leaves_prev, treedef = jax.tree.flatten(prev_master)
+    flat_prev = _flat_f32(leaves_prev)
+    flat = None
+    for stacked, keys, w in chunks:
+        wnorm = jnp.asarray(np.asarray(w, np.float32) / total)
+        cl, mk = _flatten_chunk(stacked, jnp.asarray(keys, jnp.int32),
+                                mask_fn=mask_fn)
+        part = kops.fill_aggregate(cl, mk, wnorm, flat_prev)
+        flat = part if flat is None else flat + part
+    return _unflatten_like(flat, leaves_prev, treedef)
+
+
+@functools.partial(jax.jit, static_argnames=("mask_fn",))
+def _flatten_chunk(stacked, keys, mask_fn):
+    """(stacked leaves (m, ...), keys (m, nb)) -> (m, P) client and mask
+    matrices over the flattened parameter vector."""
+    masks = jax.vmap(mask_fn)(stacked, keys)
+    lc = jax.tree.leaves(stacked)
+    lm = jax.tree.leaves(masks)
+    m = lc[0].shape[0]
+    cl = jnp.concatenate(
+        [x.reshape(m, -1).astype(jnp.float32) for x in lc], axis=1)
+    mk = jnp.concatenate(
+        [jnp.broadcast_to(
+            mm.reshape(mm.shape + (1,) * (x.ndim - mm.ndim)),
+            x.shape).reshape(m, -1).astype(jnp.float32)
+         for mm, x in zip(lm, lc)], axis=1)
+    return cl, mk
 
 
 @functools.partial(jax.jit, static_argnames=("mask_fn",))

@@ -1,24 +1,30 @@
 """Federated NAS engine: strategies x execution backends.
 
-    FedEngine(api, clients, cfg, strategy=RealTimeNas(), backend="vmap")
+    FedEngine(api, clients, cfg, strategy=RealTimeNas(), backend="mesh")
 
 Strategies: RealTimeNas (Algorithm 4), OfflineNas (Zhu & Jin 2019
 baseline), FedAvgBaseline (Algorithm 1, fixed architecture).
-Backends: "loop" (reference, one dispatch per (individual, client) pair)
-and "vmap" (ClientBatch-stacked, O(population) dispatches per
-generation — constant in the number of clients).
+Backends: "loop" (reference, one dispatch per (individual, client)
+pair), "vmap" (ClientBatch-stacked, O(population) dispatches per
+generation — constant in the number of clients) and "mesh" (population
+axis sharded over a jax device mesh, O(population / devices)
+dispatches).  See docs/architecture.md for the full matrix and the
+round lifecycle.
 """
-from repro.engine.backends import BACKENDS, ExecutionBackend, LoopBackend, \
-    VmapBackend, make_backend
+from repro.engine.backends import BACKENDS, BACKEND_NAMES, \
+    ExecutionBackend, LoopBackend, VmapBackend, make_backend
 from repro.engine.engine import FedEngine
+from repro.engine.mesh_backend import MeshBackend
 from repro.engine.strategies import FedAvgBaseline, OfflineNas, RealTimeNas, \
     Strategy
-from repro.engine.types import BYTES_PER_PARAM, CommStats, EngineResult, \
-    ERROR_COUNT_BYTES, RoundReport, RunConfig, history_dict
+from repro.engine.types import AGGREGATE_BACKENDS, BYTES_PER_PARAM, \
+    CommStats, EngineResult, ERROR_COUNT_BYTES, RoundReport, RunConfig, \
+    history_dict
 
 __all__ = [
-    "BACKENDS", "BYTES_PER_PARAM", "CommStats", "ERROR_COUNT_BYTES",
-    "EngineResult", "ExecutionBackend", "FedAvgBaseline", "FedEngine",
-    "LoopBackend", "OfflineNas", "RealTimeNas", "RoundReport", "RunConfig",
-    "Strategy", "VmapBackend", "history_dict", "make_backend",
+    "AGGREGATE_BACKENDS", "BACKENDS", "BACKEND_NAMES", "BYTES_PER_PARAM",
+    "CommStats", "ERROR_COUNT_BYTES", "EngineResult", "ExecutionBackend",
+    "FedAvgBaseline", "FedEngine", "LoopBackend", "MeshBackend",
+    "OfflineNas", "RealTimeNas", "RoundReport", "RunConfig", "Strategy",
+    "VmapBackend", "history_dict", "make_backend",
 ]

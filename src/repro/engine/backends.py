@@ -17,9 +17,16 @@ live in the strategies / engine, so every backend sees the same inputs):
 ``VmapBackend`` stacks each same-shape client group into a ``ClientBatch``
 and runs all population x client updates — and all 2N x participants
 evaluations — in O(population) jitted dispatches per generation,
-constant in the number of participating clients.  Both count
-``dispatches`` so tests and benchmarks can assert that claim instead of
-trusting it.
+constant in the number of participating clients.  ``MeshBackend``
+(``repro.engine.mesh_backend``) additionally shards the population axis
+of those stacks over a jax device mesh, for O(population / devices)
+dispatches per generation.  All backends count ``dispatches`` so tests
+and benchmarks can assert those claims instead of trusting them.
+
+Every backend routes Algorithm 3 through ``RunConfig.aggregate_backend``
+identically: ``"xla"`` is the jnp reference, ``"pallas"`` the
+``repro.kernels.fill_aggregate`` TPU kernel (interpret-mode off-TPU).
+Unknown values are rejected by ``RunConfig`` at construction time.
 """
 from __future__ import annotations
 
@@ -41,26 +48,49 @@ Params = Any
 
 
 class ExecutionBackend(Protocol):
+    """The dispatch contract every backend implements.
+
+    ``dispatches`` counts jitted device dispatches issued so far (the
+    scaling claims in docs/architecture.md are asserted against it).
+    All ``keys`` are (num_blocks,) int32 choice keys; ``client_ids`` /
+    ``groups`` index into the backend's client list; ``lr`` is the
+    round's learning rate.  Returned parameters are full pytrees;
+    ``eval_*`` return (len(keys),) float64 weighted test-error rates in
+    [0, 1]."""
+
     name: str
     dispatches: int
 
     def train_fill(self, master: Params, keys: Sequence[np.ndarray],
-                   groups: Sequence[np.ndarray], lr: float) -> Params: ...
+                   groups: Sequence[np.ndarray], lr: float) -> Params:
+        """Train keys[g] on client group g from the shared master and
+        fill-aggregate the uploads into the new master (Algorithm 3/4)."""
+        ...
 
     def train_fedavg(self, params: Params, key: np.ndarray,
-                     client_ids: np.ndarray, lr: float) -> Params: ...
+                     client_ids: np.ndarray, lr: float) -> Params:
+        """One FedAvg round of ``key``'s standalone model over every
+        listed client (Algorithm 1)."""
+        ...
 
     def train_fedavg_population(self, params_list: Sequence[Params],
                                 keys: Sequence[np.ndarray],
                                 client_ids: np.ndarray,
-                                lr: float) -> List[Params]: ...
+                                lr: float) -> List[Params]:
+        """``train_fedavg`` for each (params, key) pair — every client
+        trains every individual (the offline baseline)."""
+        ...
 
     def eval_shared(self, params: Params, keys: Sequence[np.ndarray],
-                    client_ids: np.ndarray) -> np.ndarray: ...
+                    client_ids: np.ndarray) -> np.ndarray:
+        """Weighted test-error rate of every key on one shared master."""
+        ...
 
     def eval_paired(self, params_list: Sequence[Params],
                     keys: Sequence[np.ndarray],
-                    client_ids: np.ndarray) -> np.ndarray: ...
+                    client_ids: np.ndarray) -> np.ndarray:
+        """Weighted test-error rate of every (params, key) pair."""
+        ...
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +98,11 @@ class ExecutionBackend(Protocol):
 # ---------------------------------------------------------------------------
 
 class LoopBackend:
+    """Reference execution: one jitted dispatch per (individual, client)
+    pair — exactly the pre-engine (per-pair Python loop) semantics that
+    the batched backends are tested against.  Algorithm 3 routes through
+    ``fill_aggregate(backend=cfg.aggregate_backend)``."""
+
     name = "loop"
 
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
@@ -131,82 +166,24 @@ class LoopBackend:
 
 
 # ---------------------------------------------------------------------------
-# Vectorized backend: O(#shape-buckets) dispatches per call
+# Shared stacking/caching for the batched (vmap, mesh) backends
 # ---------------------------------------------------------------------------
 
-class VmapBackend:
-    """Vectorized execution over ``ClientBatch``-stacked shards.
-
-    Exploits the double-sampling structure: every client in group g
-    trains/evaluates the *same* choice key, so the key stays a scalar
-    argument and XLA compiles exactly the selected-branch program of the
-    loop backend.  (Batching the key through ``lax.switch`` would lower
-    to computing all branches and selecting — a 3-4x compute blowup that
-    no dispatch saving repays; measured on this repo's CNN supernet.)
-
-    Within a dispatch the stacked client axis is consumed by
-    ``lax.scan`` — per-iteration working set stays cache-sized, unlike a
-    full client-axis ``vmap`` whose batched convolutions stream memory —
-    with an optional inner ``vmap`` tile for evaluation
-    (``RunConfig.vmap_eval_tile``), where the forward-only compute is
-    cheap enough for moderate batching to pay.
-
-    Per generation this issues O(population) dispatches — constant in
-    the number of participating clients, the axis that actually scales —
-    instead of the loop backend's O(population x clients).
-    """
-
-    name = "vmap"
+class StackedClientBase:
+    """Host-side stacking, bucketing and caching shared by the batched
+    execution backends (``VmapBackend``, ``MeshBackend``): a
+    device-resident stacked train-shard store, per-group gathers from it,
+    and a memoized stacked test set per participant set.  Subclasses
+    implement the ``ExecutionBackend`` protocol on top."""
 
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
                  cfg: RunConfig):
-        if cfg.aggregate_backend != "xla":
-            raise ValueError(
-                "backend='vmap' aggregates with fill_aggregate_stacked, "
-                "which only has an XLA path; aggregate_backend="
-                f"{cfg.aggregate_backend!r} would be silently ignored — "
-                "use backend='loop' to route Algorithm 3 to the "
-                f"{cfg.aggregate_backend!r} kernel")
         self.api = api
         self.clients = clients
         self.cfg = cfg
-        upd = client_update_fn(api, cfg.local_epochs, cfg.momentum)
-        ev = eval_count_fn(api)
-
-        def scan_update(params, key, xb, yb, lr):
-            # xb/yb: (L, nb, B, ...) -> stacked updated params (L, ...)
-            def one(_, shard):
-                return None, upd(params, key, shard[0], shard[1], lr)
-            return jax.lax.scan(one, None, (xb, yb))[1]
-
-        def scan_update_avg(params, key, xb, yb, lr, wnorm):
-            # fused local SGD + weighted client average -> float32 partials
-            outs = scan_update(params, key, xb, yb, lr)
-
-            def avg(x):
-                w = wnorm.reshape((-1,) + (1,) * (x.ndim - 1))
-                return jnp.sum(w * x.astype(jnp.float32), axis=0)
-
-            return jax.tree.map(avg, outs)
-
-        def eval_tiles(params, key, xb, yb):
-            # xb/yb: (T, tile, nb, B, ...) -> total error count
-            tile_ev = jax.vmap(ev, in_axes=(None, None, 0, 0))
-
-            def one(acc, shard):
-                return acc + jnp.sum(tile_ev(params, key,
-                                             shard[0], shard[1])), None
-            return jax.lax.scan(one, jnp.zeros((), jnp.int32),
-                                (xb, yb))[0]
-
-        self._scan_update = jax.jit(scan_update)
-        self._scan_update_avg = jax.jit(scan_update_avg)
-        self._eval_tiles = jax.jit(eval_tiles)
         self._test_cache = {}
         self._train_store_cache = None
         self.dispatches = 0
-
-    # -- helpers ------------------------------------------------------------
 
     def _stack(self, client_ids, split):
         return ClientBatch.stack([self.clients[int(i)] for i in client_ids],
@@ -250,6 +227,91 @@ class VmapBackend:
                            np.float32)
             yield xb[rows], yb[rows], w, len(sel)
 
+    def _test_batches(self, client_ids):
+        """Memoized test-shard stacks: shards are immutable, and the
+        pooled wrong/total error is order-invariant, so the ids can be
+        canonicalized (sorted) and the host-side np.stack done once per
+        participant set instead of once per key per generation.  Size-2
+        (current + previous set): full participation hits every round,
+        while partial participation — a fresh set each round — never
+        pins more than two stacked copies of the test data."""
+        key = tuple(sorted(int(i) for i in client_ids))
+        if key not in self._test_cache:
+            if len(self._test_cache) >= 2:
+                self._test_cache.pop(next(iter(self._test_cache)))
+            self._test_cache[key] = list(self._group_batches(key, "test"))
+        return self._test_cache[key]
+
+    def train_fedavg(self, params, key, client_ids, lr):
+        """Algorithm 1 for one model == the population path at P = 1."""
+        return self.train_fedavg_population([params], [key],
+                                            client_ids, lr)[0]
+
+
+# ---------------------------------------------------------------------------
+# Vectorized backend: O(#shape-buckets) dispatches per call
+# ---------------------------------------------------------------------------
+
+class VmapBackend(StackedClientBase):
+    """Vectorized execution over ``ClientBatch``-stacked shards.
+
+    Exploits the double-sampling structure: every client in group g
+    trains/evaluates the *same* choice key, so the key stays a scalar
+    argument and XLA compiles exactly the selected-branch program of the
+    loop backend.  (Batching the key through ``lax.switch`` would lower
+    to computing all branches and selecting — a 3-4x compute blowup that
+    no dispatch saving repays; measured on this repo's CNN supernet.)
+
+    Within a dispatch the stacked client axis is consumed by
+    ``lax.scan`` — per-iteration working set stays cache-sized, unlike a
+    full client-axis ``vmap`` whose batched convolutions stream memory —
+    with an optional inner ``vmap`` tile for evaluation
+    (``RunConfig.vmap_eval_tile``), where the forward-only compute is
+    cheap enough for moderate batching to pay.
+
+    Per generation this issues O(population) dispatches — constant in
+    the number of participating clients, the axis that actually scales —
+    instead of the loop backend's O(population x clients).
+    """
+
+    name = "vmap"
+
+    def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
+                 cfg: RunConfig):
+        super().__init__(api, clients, cfg)
+        upd = client_update_fn(api, cfg.local_epochs, cfg.momentum)
+        ev = eval_count_fn(api)
+
+        def scan_update(params, key, xb, yb, lr):
+            # xb/yb: (L, nb, B, ...) -> stacked updated params (L, ...)
+            def one(_, shard):
+                return None, upd(params, key, shard[0], shard[1], lr)
+            return jax.lax.scan(one, None, (xb, yb))[1]
+
+        def scan_update_avg(params, key, xb, yb, lr, wnorm):
+            # fused local SGD + weighted client average -> float32 partials
+            outs = scan_update(params, key, xb, yb, lr)
+
+            def avg(x):
+                w = wnorm.reshape((-1,) + (1,) * (x.ndim - 1))
+                return jnp.sum(w * x.astype(jnp.float32), axis=0)
+
+            return jax.tree.map(avg, outs)
+
+        def eval_tiles(params, key, xb, yb):
+            # xb/yb: (T, tile, nb, B, ...) -> total error count
+            tile_ev = jax.vmap(ev, in_axes=(None, None, 0, 0))
+
+            def one(acc, shard):
+                return acc + jnp.sum(tile_ev(params, key,
+                                             shard[0], shard[1])), None
+            return jax.lax.scan(one, jnp.zeros((), jnp.int32),
+                                (xb, yb))[0]
+
+        self._scan_update = jax.jit(scan_update)
+        self._scan_update_avg = jax.jit(scan_update_avg)
+        self._eval_tiles = jax.jit(eval_tiles)
+
     # -- protocol -----------------------------------------------------------
 
     def train_fill(self, master, keys, groups, lr):
@@ -268,7 +330,8 @@ class VmapBackend:
         # dispatch per chunk; concatenating first would duplicate every
         # upload on device just to save the partial-sum adds)
         master = fill_aggregate_stacked(master, chunks,
-                                        mask_fn=self.api.trained_mask)
+                                        mask_fn=self.api.trained_mask,
+                                        backend=self.cfg.aggregate_backend)
         self.dispatches += len(chunks)
         return master
 
@@ -280,10 +343,6 @@ class VmapBackend:
             self.dispatches += 1
             acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
         return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, params)
-
-    def train_fedavg(self, params, key, client_ids, lr):
-        return self.train_fedavg_population([params], [key],
-                                            client_ids, lr)[0]
 
     def train_fedavg_population(self, params_list, keys, client_ids, lr):
         # gather the participants' train shards once for every individual
@@ -315,21 +374,6 @@ class VmapBackend:
             total += m * batch.samples_per_shard
         return wrong / max(total, 1)
 
-    def _test_batches(self, client_ids):
-        """Memoized test-shard stacks: shards are immutable, and the
-        pooled wrong/total error is order-invariant, so the ids can be
-        canonicalized (sorted) and the host-side np.stack done once per
-        participant set instead of once per key per generation.  Size-2
-        (current + previous set): full participation hits every round,
-        while partial participation — a fresh set each round — never
-        pins more than two stacked copies of the test data."""
-        key = tuple(sorted(int(i) for i in client_ids))
-        if key not in self._test_cache:
-            if len(self._test_cache) >= 2:
-                self._test_cache.pop(next(iter(self._test_cache)))
-            self._test_cache[key] = list(self._group_batches(key, "test"))
-        return self._test_cache[key]
-
     def eval_shared(self, params, keys, client_ids):
         batches = self._test_batches(client_ids)
         return np.asarray([self._eval_one(params, np.asarray(k, np.int32),
@@ -343,15 +387,23 @@ class VmapBackend:
 
 
 BACKENDS = {"loop": LoopBackend, "vmap": VmapBackend}
+BACKEND_NAMES = ("loop", "mesh", "vmap")
 
 
 def make_backend(name: str, api: SupernetAPI,
                  clients: Sequence[ClientDataset],
                  cfg: RunConfig) -> ExecutionBackend:
+    """Build the execution backend ``name`` ('loop' | 'vmap' | 'mesh').
+
+    Called by ``FedEngine.__init__`` — i.e. at configuration time, so an
+    unknown name fails before any round runs.  ``MeshBackend`` lives in
+    ``repro.engine.mesh_backend`` and registers itself into ``BACKENDS``
+    when that module is imported (``repro.engine.__init__`` does so
+    eagerly; no jax device/mesh state is touched until instantiation)."""
     try:
         cls = BACKENDS[name]
     except KeyError:
         raise ValueError(
             f"unknown execution backend {name!r}; "
-            f"available: {sorted(BACKENDS)}") from None
+            f"available: {list(BACKEND_NAMES)}") from None
     return cls(api, clients, cfg)

@@ -5,9 +5,10 @@ offline baseline — participant sampling, the per-round lr schedule,
 communication/compute accounting and the typed ``RoundReport`` history —
 and delegates the rest to a ``Strategy`` (what happens inside a round) and
 an ``ExecutionBackend`` (how client work is dispatched: ``"loop"`` for the
-reference per-pair path, ``"vmap"`` for the vectorized one).
+reference per-pair path, ``"vmap"`` for the vectorized one, ``"mesh"``
+for the device-mesh-sharded one — see docs/architecture.md).
 
-    engine = FedEngine(api, clients, RunConfig(backend="vmap"))
+    engine = FedEngine(api, clients, RunConfig(backend="mesh"))
     result = engine.run()            # EngineResult
     history = result.history()       # legacy dict-of-lists view
 """
@@ -29,6 +30,26 @@ from repro.optim import round_decay
 
 
 class FedEngine:
+    """One round loop for every federated NAS runtime.
+
+    Args:
+      * ``api`` — the model family's ``SupernetAPI`` (init / loss /
+        error-count / trained-mask / flops / payload as functions of a
+        choice key).
+      * ``clients`` — the ``ClientDataset`` population (pre-batched
+        local train/test shards; ``weight`` = n_k for weighted
+        averaging).
+      * ``cfg`` — a ``RunConfig`` (defaults to ``RunConfig()``); see its
+        docstring for every knob and unit.
+      * ``strategy`` — what happens inside a round; defaults to
+        ``RealTimeNas()`` (paper Algorithm 4).
+      * ``backend`` — an execution backend name (``'loop' | 'vmap' |
+        'mesh'``, overriding ``cfg.backend``) or an already-built
+        ``ExecutionBackend`` instance (e.g. ``MeshBackend(...,
+        mesh=make_production_mesh())``).  Unknown names raise here, at
+        construction time.
+    """
+
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
                  cfg: Optional[RunConfig] = None,
                  strategy: Optional[Strategy] = None,
@@ -48,6 +69,11 @@ class FedEngine:
 
     def run(self, callback: Optional[Callable[[int, RoundReport], None]]
             = None) -> EngineResult:
+        """Run ``cfg.generations`` federated rounds and return an
+        ``EngineResult`` (typed ``RoundReport`` history + ``CommStats``
+        totals + strategy extras).  ``callback(gen, report)`` fires after
+        every round.  Re-entrant: repeated calls reset all run state and
+        reproduce the same seed-deterministic trajectory."""
         cfg = self.cfg
         # fresh run state so repeated run() calls are independent and
         # seed-reproducible (the legacy rt_enas.run was a pure function)

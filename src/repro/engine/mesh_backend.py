@@ -1,0 +1,372 @@
+"""MeshBackend: device-mesh-sharded client execution for FedEngine.
+
+The double-sampling design (paper Algorithm 4) makes every generation an
+embarrassingly parallel population x client-group workload: group g
+trains individual g's sub-model, and the 2N fitness evaluations are
+independent.  ``VmapBackend`` already turns that structure into
+O(population) jitted dispatches; this backend additionally shards the
+*population axis* of the same ``ClientBatch``-stacked tensors over a
+``jax.sharding.Mesh`` (``launch.mesh.make_host_mesh`` by default, any
+mesh — e.g. ``make_production_mesh()`` — via the ``mesh=`` argument), so
+a generation costs O(population / devices) dispatches and each device
+only touches its slice of the population:
+
+  * ``train_fill``   — (group, client)-stacked shards are gathered from
+    the resident train store, padded to the mesh size, placed with
+    ``NamedSharding`` (``launch.sharding.batch_spec``) and consumed by
+    one ``shard_map`` program per shape bucket that fuses local SGD with
+    the fill-aggregation partial sum (Algorithm 3); a ``psum`` over the
+    population axes yields the replicated new master.
+  * ``train_fedavg_population`` — individuals (stacked parameters +
+    keys) are sharded over the mesh; every device FedAvg-trains its
+    slice of the population on the (replicated) participant shards.
+  * ``eval_shared`` / ``eval_paired`` — the 2N choice keys (and paired
+    parameter stacks) are sharded; each device counts test errors for
+    its keys over the replicated stacked test set, one dispatch per
+    shape bucket for the WHOLE key batch.
+
+Inside a shard every (individual, client) pair runs under ``lax.scan``
+with the choice key a traced *scalar*, so ``lax.switch`` in the model
+forward stays a real branch (vmapping the key axis would lower to
+compute-all-branches-and-select — the 3-4x blowup documented on
+``VmapBackend``).
+
+Determinism / parity: padding rows carry weight 0 and weights are
+normalized globally, so results match ``VmapBackend`` within fp32
+reduction-order noise (<= 1e-5 on the smoke supernet; asserted by
+``tests/test_engine.py``) and CommStats — which the strategies account,
+independent of execution — match exactly.
+
+Run multi-device on a plain CPU host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+is imported; this is how CI exercises an 8-way mesh).
+
+``RunConfig.aggregate_backend`` is honored like every other backend:
+``"xla"`` uses the fused partial-sum path above; ``"pallas"`` returns
+the sharded uploads and routes Algorithm 3 through the
+``repro.kernels.fill_aggregate`` kernel via ``fill_aggregate_stacked``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.aggregate import fill_aggregate_stacked
+from repro.core.federated import client_update_fn, eval_count_fn
+from repro.core.supernet import SupernetAPI
+from repro.data.pipeline import ClientDataset
+from repro.engine.backends import StackedClientBase
+from repro.engine.types import RunConfig
+from repro.launch.mesh import data_axes, make_host_mesh, mesh_axis_size
+from repro.launch.sharding import batch_spec
+
+
+def _zeros_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+class MeshBackend(StackedClientBase):
+    """Population-axis-sharded execution over a jax device mesh.
+
+    Args (beyond the ``ExecutionBackend`` constructor contract):
+      * ``mesh`` — optional ``jax.sharding.Mesh``; defaults to
+        ``launch.mesh.make_host_mesh()`` (all local devices on one
+        ``data`` axis).  The population axis is sharded over
+        ``launch.mesh.data_axes(mesh)``; the ``model`` axis is left for
+        future tensor-parallel masters and must currently be size 1 in
+        the axes this backend shards over.
+    """
+
+    name = "mesh"
+
+    def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
+                 cfg: RunConfig, mesh: Optional[Mesh] = None):
+        super().__init__(api, clients, cfg)
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.axes = data_axes(self.mesh)
+        self.num_devices = mesh_axis_size(self.mesh, self.axes)
+        upd = client_update_fn(api, cfg.local_epochs, cfg.momentum)
+        ev = eval_count_fn(api)
+        mask_fn = api.trained_mask
+        axes = self.axes
+        pop = PartitionSpec(axes)       # leading axis sharded, rest replicated
+        rep = PartitionSpec()
+
+        # -- train_fill: fused local SGD + Algorithm 3 partial sum ----------
+        def fill_body(master, keys, xb, yb, w, lr):
+            # local shapes: keys (Gl, nb); xb/yb (Gl, S, nbat, B, ...);
+            # w (Gl, S) globally normalized (0 = padding).  The per-group
+            # combine mirrors aggregate._fill_stacked_partial expression
+            # for expression so the vmap backend's fp32 reduction order —
+            # and therefore its results, bit for bit in practice — is
+            # preserved under sharding.
+            def per_group(acc, inp):
+                key, gx, gy, gw = inp
+
+                def per_client(_, c):
+                    return None, upd(master, key, c[0], c[1], lr)
+
+                outs = jax.lax.scan(per_client, None, (gx, gy))[1]
+                keys_s = jnp.broadcast_to(key, (gw.shape[0],) + key.shape)
+                masks = jax.vmap(mask_fn)(outs, keys_s)
+
+                def combine(prev, cp, m):
+                    m = m.astype(jnp.float32)
+                    m = m.reshape(m.shape + (1,) * (cp.ndim - m.ndim))
+                    filled = (m * cp.astype(jnp.float32)
+                              + (1 - m) * prev.astype(jnp.float32)[None])
+                    wr = gw.reshape((-1,) + (1,) * (cp.ndim - 1))
+                    return jnp.sum(wr * filled, axis=0)
+
+                part = jax.tree.map(combine, master, outs, masks)
+                return jax.tree.map(jnp.add, acc, part), None
+
+            acc = jax.lax.scan(per_group, _zeros_f32(master),
+                               (keys, xb, yb, w))[0]
+            return jax.lax.psum(acc, axes)
+
+        self._fill_partial = jax.jit(shard_map(
+            fill_body, mesh=self.mesh,
+            in_specs=(rep, pop, pop, pop, pop, rep),
+            out_specs=rep, check_rep=False))
+
+        # -- train_fill, kernel route: sharded SGD, uploads come back ------
+        def uploads_body(master, keys, xb, yb, lr):
+            def per_group(_, inp):
+                key, gx, gy = inp
+
+                def per_client(__, c):
+                    return None, upd(master, key, c[0], c[1], lr)
+
+                return None, jax.lax.scan(per_client, None, (gx, gy))[1]
+
+            return jax.lax.scan(per_group, None, (keys, xb, yb))[1]
+
+        self._train_uploads = jax.jit(shard_map(
+            uploads_body, mesh=self.mesh,
+            in_specs=(rep, pop, pop, pop, rep),
+            out_specs=pop, check_rep=False))
+
+        # -- per-individual FedAvg over replicated participants -------------
+        def fedavg_body(ps, keys, xb, yb, wn, lr):
+            # ps leaves (Pl, ...), keys (Pl, nb) sharded;
+            # xb/yb (S, nbat, B, ...) and wn (S,) replicated.  Mirrors the
+            # vmap backend's scan_update_avg (stacked outs, one weighted
+            # jnp.sum) so reduction order matches across backends.
+            def per_ind(_, inp):
+                p, key = inp
+
+                def per_client(__, c):
+                    return None, upd(p, key, c[0], c[1], lr)
+
+                outs = jax.lax.scan(per_client, None, (xb, yb))[1]
+
+                def avg(x):
+                    wr = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+                    return jnp.sum(wr * x.astype(jnp.float32), axis=0)
+
+                return None, jax.tree.map(avg, outs)
+
+            return jax.lax.scan(per_ind, None, (ps, keys))[1]
+
+        self._fedavg_partial = jax.jit(shard_map(
+            fedavg_body, mesh=self.mesh,
+            in_specs=(pop, pop, rep, rep, rep, rep),
+            out_specs=pop, check_rep=False))
+
+        # -- sharded-key evaluation over the replicated test stack ----------
+        def eval_shared_body(params, keys, xb, yb):
+            def per_key(_, key):
+                def per_client(a, c):
+                    return a + ev(params, key, c[0], c[1]), None
+
+                return None, jax.lax.scan(
+                    per_client, jnp.zeros((), jnp.int32), (xb, yb))[0]
+
+            return jax.lax.scan(per_key, None, keys)[1]
+
+        self._eval_shared_counts = jax.jit(shard_map(
+            eval_shared_body, mesh=self.mesh,
+            in_specs=(rep, pop, rep, rep),
+            out_specs=pop, check_rep=False))
+
+        def eval_paired_body(ps, keys, xb, yb):
+            def per_pair(_, inp):
+                p, key = inp
+
+                def per_client(a, c):
+                    return a + ev(p, key, c[0], c[1]), None
+
+                return None, jax.lax.scan(
+                    per_client, jnp.zeros((), jnp.int32), (xb, yb))[0]
+
+            return jax.lax.scan(per_pair, None, (ps, keys))[1]
+
+        self._eval_paired_counts = jax.jit(shard_map(
+            eval_paired_body, mesh=self.mesh,
+            in_specs=(pop, pop, rep, rep),
+            out_specs=pop, check_rep=False))
+
+    # -- placement helpers --------------------------------------------------
+
+    def _pad(self, n: int) -> int:
+        """Rows to append so the leading axis divides the mesh."""
+        return (-n) % self.num_devices
+
+    def _put_pop(self, arr):
+        """Place one stacked array with its leading (population) axis
+        sharded over the mesh's data axes (``launch.sharding.batch_spec``)."""
+        arr = jnp.asarray(arr)
+        spec = batch_spec(self.mesh, arr.shape[0], arr.ndim)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def _put_pop_tree(self, tree):
+        return jax.tree.map(self._put_pop, tree)
+
+    # -- train_fill ----------------------------------------------------------
+
+    def _group_bucket_arrays(self, keys, groups, total):
+        """Per shape bucket of the resident train store, the group-major
+        stacked arrays the sharded programs consume: (keys (Gp, nb) int32,
+        xb (Gp, S, nbat, B, ...), yb, w (Gp, S) f32 normalized by
+        ``total``), with G padded to Gp (a mesh multiple) and ragged
+        groups padded to S clients — all padding at weight 0."""
+        out = []
+        g_n = len(groups)
+        pad = self._pad(g_n)
+        keys_arr = np.zeros((g_n + pad, self.api.num_blocks), np.int32)
+        keys_arr[:g_n] = np.stack([np.asarray(k, np.int32) for k in keys])
+        karr = self._put_pop(keys_arr)     # one transfer, shared by buckets
+        for pos, xb_all, yb_all in self._train_store():
+            entries = [[(pos[int(c)], self.clients[int(c)].weight)
+                        for c in g if int(c) in pos] for g in groups]
+            s_max = max((len(e) for e in entries), default=0)
+            if s_max == 0:
+                continue
+            rows = np.zeros((g_n + pad, s_max), np.int32)
+            w = np.zeros((g_n + pad, s_max), np.float32)
+            for g, e in enumerate(entries):
+                if not e:
+                    continue
+                rows[g, :len(e)] = [row for row, _ in e]
+                # normalize exactly as fill_aggregate_stacked does (f32
+                # weight vector / f64 total) — a 1-ulp difference here
+                # amplifies over generations of SGD
+                w[g, :len(e)] = np.asarray([wt for _, wt in e],
+                                           np.float32) / total
+            xb = self._put_pop(xb_all[rows])
+            yb = self._put_pop(yb_all[rows])
+            out.append((karr, xb, yb, self._put_pop(w)))
+        return out
+
+    def train_fill(self, master, keys, groups, lr):
+        groups = [np.asarray(g) for g in groups]
+        total = float(sum(self.clients[int(c)].weight
+                          for g in groups for c in g))
+        if total == 0.0:
+            return master
+        buckets = self._group_bucket_arrays(keys, groups, total)
+        if not buckets:
+            return master
+        if self.cfg.aggregate_backend == "pallas":
+            return self._train_fill_pallas(master, buckets, lr)
+        lr = jnp.float32(lr)
+        acc = None
+        for keys_a, xb, yb, w in buckets:
+            part = self._fill_partial(master, keys_a, xb, yb, w, lr)
+            self.dispatches += 1
+            acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+        return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, master)
+
+    def _train_fill_pallas(self, master, buckets, lr):
+        """Kernel route: run the sharded local SGD, flatten the uploads
+        and hand Algorithm 3 to ``fill_aggregate_stacked(backend="pallas")``
+        (weight-0 padding rows contribute nothing)."""
+        lr = jnp.float32(lr)
+        chunks = []
+        for keys_a, xb, yb, w in buckets:
+            outs = self._train_uploads(master, keys_a, xb, yb, lr)
+            self.dispatches += 1
+            gp, s = w.shape
+            flat = jax.tree.map(
+                lambda x: x.reshape((gp * s,) + x.shape[2:]), outs)
+            chunks.append((flat, np.repeat(np.asarray(keys_a), s, axis=0),
+                           np.asarray(w).reshape(-1)))
+        master = fill_aggregate_stacked(master, chunks,
+                                        mask_fn=self.api.trained_mask,
+                                        backend="pallas")
+        self.dispatches += len(chunks)
+        return master
+
+    # -- FedAvg paths (train_fedavg delegates via StackedClientBase) ---------
+
+    def train_fedavg_population(self, params_list, keys, client_ids, lr):
+        if not params_list:
+            return []
+        total = float(sum(self.clients[int(i)].weight for i in client_ids))
+        n = len(params_list)
+        pad = self._pad(n)
+        plist = list(params_list) + [params_list[-1]] * pad
+        klist = [np.asarray(k, np.int32) for k in keys]
+        klist = klist + [klist[-1]] * pad
+        stacked = self._put_pop_tree(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *plist))
+        keys_arr = self._put_pop(np.stack(klist))
+        lr = jnp.float32(lr)
+        acc = None
+        for xb, yb, w, _ in self._group_train_gather(client_ids):
+            part = self._fedavg_partial(stacked, keys_arr, xb, yb,
+                                        jnp.asarray(w / total), lr)
+            self.dispatches += 1
+            acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+        out = jax.tree.map(lambda a, s: a.astype(s.dtype), acc, stacked)
+        return [jax.tree.map(lambda x: x[i], out) for i in range(n)]
+
+    # -- evaluation ----------------------------------------------------------
+
+    def _padded_keys(self, keys):
+        klist = [np.asarray(k, np.int32) for k in keys]
+        klist = klist + [klist[-1]] * self._pad(len(klist))
+        return self._put_pop(np.stack(klist))
+
+    def eval_shared(self, params, keys, client_ids):
+        batches = self._test_batches(client_ids)
+        karr = self._padded_keys(keys)
+        wrong = np.zeros(karr.shape[0], np.int64)
+        total = 0
+        for cb in batches:
+            counts = self._eval_shared_counts(params, karr,
+                                              jnp.asarray(cb.xb),
+                                              jnp.asarray(cb.yb))
+            self.dispatches += 1
+            wrong += np.asarray(counts, np.int64)
+            total += cb.num_shards * cb.samples_per_shard
+        return wrong[:len(keys)] / max(total, 1)
+
+    def eval_paired(self, params_list, keys, client_ids):
+        batches = self._test_batches(client_ids)
+        pad = self._pad(len(params_list))
+        plist = list(params_list) + [params_list[-1]] * pad
+        stacked = self._put_pop_tree(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *plist))
+        karr = self._padded_keys(keys)
+        wrong = np.zeros(karr.shape[0], np.int64)
+        total = 0
+        for cb in batches:
+            counts = self._eval_paired_counts(stacked, karr,
+                                              jnp.asarray(cb.xb),
+                                              jnp.asarray(cb.yb))
+            self.dispatches += 1
+            wrong += np.asarray(counts, np.int64)
+            total += cb.num_shards * cb.samples_per_shard
+        return wrong[:len(keys)] / max(total, 1)
+
+
+from repro.engine import backends as _backends  # noqa: E402
+
+_backends.BACKENDS.setdefault("mesh", MeshBackend)

@@ -31,14 +31,28 @@ from repro.engine.types import BYTES_PER_PARAM, ERROR_COUNT_BYTES, \
 
 
 class Strategy(Protocol):
+    """What differs between the paper's algorithms, and nothing else."""
+
     name: str
 
-    def setup(self, engine) -> None: ...
+    def setup(self, engine) -> None:
+        """Initialize run state (models, parent keys) before round 1;
+        called by every ``FedEngine.run`` so runs are re-entrant."""
+        ...
 
     def round(self, engine, gen: int, participants: np.ndarray,
-              lr: float) -> RoundReport: ...
+              lr: float) -> RoundReport:
+        """Execute one federated round (= one generation): sequence the
+        backend's train/eval calls, account traffic on ``engine.stats``
+        and return the round's ``RoundReport``.  ``gen`` is 1-based;
+        ``participants`` the sampled client ids; ``lr`` this round's
+        client learning rate."""
+        ...
 
-    def extras(self, engine) -> Dict: ...
+    def extras(self, engine) -> Dict:
+        """Run-level outputs merged into ``EngineResult.extras`` (e.g.
+        the final master parameters)."""
+        ...
 
 
 def _account_train(engine, keys, groups, download_models: bool):

@@ -20,8 +20,44 @@ BYTES_PER_PARAM = 4        # float32 payloads
 ERROR_COUNT_BYTES = 4      # one int32 error count per evaluated sub-model
 
 
+AGGREGATE_BACKENDS = ("xla", "pallas")
+# execution backend names live in backends.BACKEND_NAMES (single source)
+
+
 @dataclasses.dataclass
 class RunConfig:
+    """Every knob of a federated NAS run, validated at construction.
+
+    Search / schedule:
+      * ``population`` — N, individuals per generation (Algorithm 4).
+      * ``generations`` — rounds to run (one NSGA-II generation == one
+        federated communication round).
+      * ``participation`` — C in the paper: fraction of clients sampled
+        each round (m = round(C * K) participants).
+      * ``lr0`` / ``lr_decay`` — client SGD learning rate, decayed as
+        ``lr0 * lr_decay**(gen - 1)`` per round.
+      * ``momentum`` / ``local_epochs`` — client-side SGD momentum and
+        number of local passes E over the client shard per round.
+      * ``crossover`` / ``mutation`` — per-offspring probabilities of the
+        two variation operators (Algorithm 2).
+      * ``seed`` — seeds both participant/group sampling and model init.
+
+    Execution:
+      * ``aggregate_backend`` — how Algorithm 3 (fill-aggregation) is
+        computed: ``"xla"`` (jnp reference) or ``"pallas"`` (the
+        ``repro.kernels.fill_aggregate`` TPU kernel; interpret-mode —
+        i.e. XLA-orchestrated, Python-executed — off-TPU).  Honored by
+        every execution backend; unknown values raise here, at config
+        time.
+      * ``backend`` — client-execution backend: ``"loop"`` (reference,
+        one dispatch per (individual, client) pair), ``"vmap"``
+        (ClientBatch-stacked, O(population) dispatches/gen) or ``"mesh"``
+        (population axis sharded over a jax device mesh,
+        O(population / devices) dispatches/gen).  Validated when the
+        engine builds the backend.
+      * ``vmap_eval_tile`` — clients evaluated per inner vmap tile in
+        the vmap backend's forward-only eval path (>= 1).
+    """
     population: int = 10
     generations: int = 500
     participation: float = 1.0          # C in the paper
@@ -32,13 +68,43 @@ class RunConfig:
     crossover: float = 0.9
     mutation: float = 0.1
     seed: int = 0
-    aggregate_backend: str = "xla"      # 'pallas' routes Algorithm 3 to the kernel
-    backend: str = "loop"               # execution backend: 'loop' | 'vmap'
+    aggregate_backend: str = "xla"      # Algorithm 3 route: 'xla' | 'pallas'
+    backend: str = "loop"               # execution: 'loop' | 'vmap' | 'mesh'
     vmap_eval_tile: int = 32            # clients vmapped per eval scan step
+
+    def __post_init__(self):
+        if self.aggregate_backend not in AGGREGATE_BACKENDS:
+            raise ValueError(
+                f"unknown aggregate_backend {self.aggregate_backend!r}; "
+                f"available: {list(AGGREGATE_BACKENDS)}")
+        if self.vmap_eval_tile < 1:
+            raise ValueError(
+                f"vmap_eval_tile must be >= 1, got {self.vmap_eval_tile}")
 
 
 @dataclasses.dataclass
 class CommStats:
+    """Cumulative server<->client traffic and compute of one run.
+
+    All byte fields are *logical wire bytes* (float32 payloads, i.e.
+    ``BYTES_PER_PARAM`` per parameter) — what the paper's Section IV.G
+    cost comparison counts, independent of the execution backend.  Every
+    backend therefore produces identical CommStats for the same seed.
+
+    Fields:
+      * ``down_bytes``   — total server->client bytes: sub-model payload
+        downloads (training phase) PLUS the evaluation-phase master /
+        choice-key downloads.
+      * ``up_bytes``     — total client->server bytes: sub-model uploads
+        PLUS the evaluation-phase error-count uploads.
+      * ``client_train_passes`` — number of (individual, client) local
+        training passes (E local epochs each), the paper's compute unit.
+      * ``eval_down_bytes`` / ``eval_up_bytes`` — the fitness-phase
+        subset of down/up_bytes (added in PR 1): per participant, the
+        master download (real-time strategy only), 2N choice keys down
+        (``SupernetAPI.key_bytes`` each) and one int32 error count per
+        evaluated key up.  Always <= the corresponding totals.
+    """
     down_bytes: float = 0.0
     up_bytes: float = 0.0
     client_train_passes: int = 0
@@ -46,16 +112,20 @@ class CommStats:
     eval_up_bytes: float = 0.0          # subset of up_bytes (fitness phase)
 
     def add_download(self, params: int, copies: int = 1):
+        """Account ``copies`` sub-model downloads of ``params`` params."""
         self.down_bytes += BYTES_PER_PARAM * params * copies
 
     def add_upload(self, params: int, copies: int = 1):
+        """Account ``copies`` sub-model uploads of ``params`` params."""
         self.up_bytes += BYTES_PER_PARAM * params * copies
 
     def add_eval_download_bytes(self, nbytes: float, copies: int = 1):
+        """Account fitness-phase downloads of ``nbytes`` bytes each."""
         self.down_bytes += nbytes * copies
         self.eval_down_bytes += nbytes * copies
 
     def add_eval_upload_bytes(self, nbytes: float, copies: int = 1):
+        """Account fitness-phase uploads of ``nbytes`` bytes each."""
         self.up_bytes += nbytes * copies
         self.eval_up_bytes += nbytes * copies
 
@@ -64,7 +134,18 @@ class CommStats:
 class RoundReport:
     """One federated round (== one NSGA-II generation for the NAS
     strategies).  Search fields a strategy does not produce stay ``None``
-    and are dropped from the legacy history dict."""
+    and are dropped from the legacy history dict.
+
+    Search fields (strategy-produced): ``objs`` is the (2N, 2) objective
+    matrix [weighted test-error rate in [0, 1], forward FLOPs/MACs of the
+    subnet]; ``parent_keys`` the N selected choice keys; ``best_*`` /
+    ``knee_*`` the error (rate) and key of the lowest-error and
+    knee-point individuals of the selected front.
+
+    Engine-stamped fields: ``down_gb`` / ``up_gb`` are the CUMULATIVE
+    CommStats totals in gigabytes (1e9 bytes) at the end of this round;
+    ``train_passes`` the cumulative (individual, client) local training
+    passes; ``wall_s`` seconds since ``run()`` started."""
     gen: int
     objs: Optional[np.ndarray] = None          # (2N, 2) [err, flops]
     parent_keys: Optional[List[np.ndarray]] = None

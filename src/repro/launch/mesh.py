@@ -19,17 +19,31 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh() -> Mesh:
-    """Degenerate 1x1 mesh over the real local device(s) — used by the CPU
-    examples so the same pjit code paths run everywhere."""
+    """(n_devices, 1) mesh over the local device(s) — the CPU examples and
+    the engine's ``MeshBackend`` use it so the same pjit/shard_map code
+    paths run everywhere.  Under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this yields an
+    N-way ``data`` axis on plain CPU hosts (the multi-device CI recipe)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
 def data_axes(mesh: Mesh):
-    """Axes the global batch is sharded over."""
+    """Axes the global batch — or the engine's population axis — is
+    sharded over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
 def fsdp_axes(mesh: Mesh):
     """Axes the parameter 'replicated' dim is FSDP-sharded over."""
     return data_axes(mesh)
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    """Total device count along ``axes`` (one name or a tuple of names)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -21,7 +21,7 @@ from typing import Any, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import data_axes, mesh_axis_size
 
 Params = Any
 
@@ -29,12 +29,8 @@ Params = Any
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1
-    if isinstance(axis, (tuple, list)):
-        n = 1
-        for a in axis:
-            n *= mesh.shape[a]
-        return n
-    return mesh.shape[axis]
+    return mesh_axis_size(mesh, tuple(axis) if isinstance(axis, list)
+                          else axis)
 
 
 def _fits(mesh: Mesh, dim: int, axis) -> bool:
@@ -124,7 +120,11 @@ def param_shardings(mesh: Mesh, params: Params) -> Params:
 # ---------------------------------------------------------------------------
 
 def batch_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
-    """Shard the leading batch dim over the data axes when divisible."""
+    """Shard the leading batch dim over the data axes when divisible.
+
+    Also used by ``repro.engine.mesh_backend`` to place the engine's
+    population-stacked tensors (leading axis = padded population) on the
+    mesh."""
     fsdp = data_axes(mesh)
     lead = fsdp if batch_size % _axis_size(mesh, fsdp) == 0 else None
     return P(*([lead] + [None] * (ndim - 1)))

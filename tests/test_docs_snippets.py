@@ -1,0 +1,36 @@
+"""Docs are executable: every fenced ```python block in docs/*.md must
+run.  Blocks within one document share a namespace (later snippets may
+use earlier imports), so each document is one test case.  Keep doc
+snippets smoke-sized — this is the contract that keeps them honest."""
+import pathlib
+import re
+
+import pytest
+
+DOCS = sorted((pathlib.Path(__file__).parent.parent / "docs").glob("*.md"))
+
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def python_blocks(path: pathlib.Path):
+    return [m.group(1) for m in FENCE.finditer(path.read_text())]
+
+
+def test_docs_exist_and_have_snippets():
+    names = {p.name for p in DOCS}
+    assert {"architecture.md", "kernels.md"} <= names
+    assert all(python_blocks(p) for p in DOCS
+               if p.name in ("architecture.md", "kernels.md"))
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_docs_snippets_run(doc):
+    blocks = python_blocks(doc)
+    if not blocks:
+        pytest.skip(f"{doc.name}: no python blocks")
+    ns = {"__name__": f"docs_snippet_{doc.stem}"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"{doc.name}[block {i}]", "exec"), ns)
+        except Exception as e:   # pragma: no cover - failure reporting
+            pytest.fail(f"{doc.name} block {i} failed: {e!r}\n{block}")

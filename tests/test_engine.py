@@ -1,12 +1,21 @@
 """FedEngine: strategy x execution-backend matrix.
 
-Backend parity ("loop" vs "vmap") on the smoke CIFAR supernet: identical
-CommStats, per-generation test errors, and master params within 1e-5;
-batched fill-aggregation against the per-upload oracle; evaluation-phase
-communication accounting; ClientBatch stacking invariants; and the legacy
-``rt_enas.run`` / ``offline_enas.run`` shims.
+Backend parity ("loop" vs "vmap" vs "mesh") on the smoke CIFAR supernet:
+identical CommStats, per-generation test errors, and master params within
+1e-5; batched fill-aggregation against the per-upload oracle (XLA and
+Pallas routes); evaluation-phase communication accounting; ClientBatch
+stacking invariants; and the legacy ``rt_enas.run`` / ``offline_enas.run``
+shims.  The mesh backend shards over however many local devices exist —
+CI additionally runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+paths are exercised on a real 8-way mesh (and
+``test_mesh_parity_forced_8_devices`` forces that in a subprocess even
+for single-device local runs).
 """
 import dataclasses
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +31,8 @@ from repro.engine import (
     BYTES_PER_PARAM, ERROR_COUNT_BYTES, FedAvgBaseline, FedEngine,
     OfflineNas, RealTimeNas, RunConfig,
 )
+
+PARITY_BACKENDS = ("loop", "vmap", "mesh")
 
 
 def tiny_clients(num_clients=8, n=480, seed=0):
@@ -48,7 +59,7 @@ def max_leaf_diff(a, b):
 def rt_parity(api):
     clients = tiny_clients()
     out = {}
-    for bk in ("loop", "vmap"):
+    for bk in PARITY_BACKENDS:
         eng = FedEngine(api, clients,
                         RunConfig(population=4, generations=2, seed=0,
                                   lr0=0.01, backend=bk))
@@ -56,22 +67,25 @@ def rt_parity(api):
     return out
 
 
-def test_rt_backends_same_master(rt_parity):
-    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_rt_backends_same_master(rt_parity, bk):
+    loop, other = rt_parity["loop"][0], rt_parity[bk][0]
     assert max_leaf_diff(loop.extras["final_master"],
-                         vmap.extras["final_master"]) <= 1e-5
+                         other.extras["final_master"]) <= 1e-5
 
 
-def test_rt_backends_same_errors_per_generation(rt_parity):
-    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
-    for a, b in zip(loop.reports, vmap.reports):
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_rt_backends_same_errors_per_generation(rt_parity, bk):
+    loop, other = rt_parity["loop"][0], rt_parity[bk][0]
+    for a, b in zip(loop.reports, other.reports):
         np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
         assert a.best_err == pytest.approx(b.best_err, abs=1e-5)
 
 
-def test_rt_backends_same_comm_stats(rt_parity):
-    loop, vmap = rt_parity["loop"][0], rt_parity["vmap"][0]
-    assert dataclasses.asdict(loop.stats) == dataclasses.asdict(vmap.stats)
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_rt_backends_same_comm_stats(rt_parity, bk):
+    loop, other = rt_parity["loop"][0], rt_parity[bk][0]
+    assert dataclasses.asdict(loop.stats) == dataclasses.asdict(other.stats)
 
 
 def test_vmap_dispatches_are_constant_in_clients(api):
@@ -92,40 +106,143 @@ def test_vmap_dispatches_are_constant_in_clients(api):
     assert eng.backend.dispatches > 3 * counts[8]
 
 
+def test_mesh_dispatches_constant_in_clients_and_below_vmap(api):
+    """The mesh backend batches the whole population into O(#buckets)
+    sharded dispatches per phase — constant in clients AND below the
+    vmap backend's O(population)."""
+    counts = {}
+    for m in (4, 8):
+        eng = FedEngine(api, tiny_clients(num_clients=m, n=240 * m // 4),
+                        RunConfig(population=4, generations=1, seed=0,
+                                  backend="mesh"))
+        eng.run()
+        counts[m] = eng.backend.dispatches
+    assert counts[4] == counts[8]
+    eng = FedEngine(api, tiny_clients(num_clients=8),
+                    RunConfig(population=4, generations=1, seed=0,
+                              backend="vmap"))
+    eng.run()
+    assert counts[8] < eng.backend.dispatches
+
+
+MESH_8DEV_SCRIPT = """
+import dataclasses
+import jax
+import numpy as np
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.configs import get_config
+from repro.core import make_api
+from repro.data import make_classification, make_clients, partition_iid
+from repro.engine import FedEngine, RunConfig
+
+api = make_api(get_config("cifar-supernet", smoke=True))
+x, y = make_classification(0, 480, image=8, signal=1.5, noise=0.5)
+clients = make_clients(x, y, partition_iid(0, 480, 8),
+                       batch=20, test_batch=20)
+out = {}
+for bk in ("vmap", "mesh"):
+    eng = FedEngine(api, clients,
+                    RunConfig(population=4, generations=2, seed=0,
+                              lr0=0.01, backend=bk))
+    out[bk] = eng.run()
+    if bk == "mesh":
+        assert eng.backend.num_devices == 8, eng.backend.num_devices
+a, b = out["vmap"], out["mesh"]
+assert dataclasses.asdict(a.stats) == dataclasses.asdict(b.stats)
+for ra, rb in zip(a.reports, b.reports):
+    np.testing.assert_allclose(ra.objs, rb.objs, atol=1e-5)
+diff = max(float(np.abs(np.asarray(p) - np.asarray(q)).max())
+           for p, q in zip(jax.tree.leaves(a.extras["final_master"]),
+                           jax.tree.leaves(b.extras["final_master"])))
+assert diff <= 1e-5, diff
+print("OK", diff)
+"""
+
+
+def test_mesh_parity_forced_8_devices():
+    """Run the vmap/mesh parity check on a FORCED 8-device CPU mesh.
+
+    XLA device count is fixed at first jax import, so an already-running
+    single-device pytest process cannot grow a mesh — a fresh subprocess
+    with XLA_FLAGS set is the only faithful way to test real sharding."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", MESH_8DEV_SCRIPT],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
 def test_offline_backend_parity(api):
     clients = tiny_clients(num_clients=4, n=240)
     out = {}
-    for bk in ("loop", "vmap"):
+    for bk in PARITY_BACKENDS:
         out[bk] = FedEngine(api, clients,
                             RunConfig(population=3, generations=1, seed=1,
                                       lr0=0.01, backend=bk),
                             strategy=OfflineNas()).run()
-    np.testing.assert_allclose(out["loop"].reports[0].objs,
-                               out["vmap"].reports[0].objs, atol=1e-5)
-    assert dataclasses.asdict(out["loop"].stats) == \
-        dataclasses.asdict(out["vmap"].stats)
+    for bk in ("vmap", "mesh"):
+        np.testing.assert_allclose(out["loop"].reports[0].objs,
+                                   out[bk].reports[0].objs, atol=1e-5)
+        assert dataclasses.asdict(out["loop"].stats) == \
+            dataclasses.asdict(out[bk].stats)
 
 
 def test_fedavg_baseline_backend_parity(api):
     clients = tiny_clients(num_clients=4, n=240)
     key = np.array([1, 0, 2, 3], np.int32)
     out = {}
-    for bk in ("loop", "vmap"):
+    for bk in PARITY_BACKENDS:
         out[bk] = FedEngine(api, clients,
                             RunConfig(generations=2, seed=0, lr0=0.01,
                                       backend=bk),
                             strategy=FedAvgBaseline(key)).run()
-    assert max_leaf_diff(out["loop"].extras["params"],
-                         out["vmap"].extras["params"]) <= 1e-5
     errs_l = [r.best_err for r in out["loop"].reports]
-    errs_v = [r.best_err for r in out["vmap"].reports]
-    np.testing.assert_allclose(errs_l, errs_v, atol=1e-5)
+    for bk in ("vmap", "mesh"):
+        assert max_leaf_diff(out["loop"].extras["params"],
+                             out[bk].extras["params"]) <= 1e-5
+        np.testing.assert_allclose(
+            errs_l, [r.best_err for r in out[bk].reports], atol=1e-5)
 
 
-def test_vmap_rejects_pallas_aggregate(api):
-    with pytest.raises(ValueError, match="pallas"):
+# ---------------------------------------------------------------------------
+# aggregate_backend routing (Algorithm 3 kernel selection)
+# ---------------------------------------------------------------------------
+
+def test_unknown_aggregate_backend_rejected_at_config_time():
+    with pytest.raises(ValueError, match="aggregate_backend"):
+        RunConfig(aggregate_backend="nope")
+
+
+def test_unknown_execution_backend_rejected_at_config_time(api):
+    with pytest.raises(ValueError, match="unknown execution backend"):
         FedEngine(api, tiny_clients(num_clients=4, n=240),
-                  RunConfig(backend="vmap", aggregate_backend="pallas"))
+                  RunConfig(backend="warp"))
+
+
+@pytest.mark.parametrize("bk", ["loop", "vmap", "mesh"])
+def test_pallas_aggregate_matches_xla(api, bk):
+    """Every execution backend honors aggregate_backend='pallas'
+    identically: same search, Algorithm 3 through the kernel."""
+    clients = tiny_clients(num_clients=4, n=240)
+    out = {}
+    for agg in ("xla", "pallas"):
+        out[agg] = FedEngine(api, clients,
+                             RunConfig(population=2, generations=1, seed=0,
+                                       lr0=0.01, backend=bk,
+                                       aggregate_backend=agg)).run()
+    assert max_leaf_diff(out["xla"].extras["final_master"],
+                         out["pallas"].extras["final_master"]) <= 1e-5
+    np.testing.assert_allclose(out["xla"].reports[0].objs,
+                               out["pallas"].reports[0].objs, atol=1e-5)
 
 
 def test_engine_run_is_reentrant(api):
