@@ -14,9 +14,12 @@ population sharded over a jax device mesh).  Run
 
 to compare the three backends on the default cross-device config (many
 small clients — the axis the loop backend's O(population x clients)
-dispatch count scales with).  As a script it forces an 8-way host device
-mesh (``--xla_force_host_platform_device_count=8``) so the mesh backend
-has devices to shard over; equivalently set XLA_FLAGS yourself.
+dispatch count scales with) AND the payload codecs (``--mode codecs``:
+per-codec wire bytes, compression ratio vs fp32, and the int8+error-
+feedback vs fp32 search trajectory; ``--out`` writes the JSON that
+``benchmarks/results/`` tracks).  As a script it forces an 8-way host
+device mesh (``--xla_force_host_platform_device_count=8``) so the mesh
+backend has devices to shard over; equivalently set XLA_FLAGS yourself.
 """
 from __future__ import annotations
 
@@ -158,6 +161,86 @@ def compare_backends(api=None, clients=None, generations: int = 3,
     return out
 
 
+def compare_codecs(api=None, clients=None, generations: int = 3,
+                   population: int = 6, seed: int = 0,
+                   engine_backend: str = "vmap",
+                   codecs=("none", "cast", "int8", "topk")) -> Dict:
+    """Same search under every payload codec (applied to both wire
+    directions): wire vs fp32-logical bytes, the compression ratio vs
+    the ``none`` baseline, and the search-quality cost (final best test
+    error vs fp32).  This is the comm trajectory the paper's "reduce the
+    local payload" claim asks for — ``benchmarks/results/`` records it
+    next to the dispatch counts."""
+    api = api or build_api()
+    if clients is None:
+        clients = build_clients(8, iid=True, n=480, batch=20, test_batch=20)
+    out: Dict = {"generations": generations, "population": population,
+                 "clients": len(clients), "engine_backend": engine_backend,
+                 "codecs": {}}
+    codecs = tuple(codecs)
+    if codecs[:1] != ("none",):       # the fp32 baseline anchors the ratios
+        codecs = ("none",) + tuple(c for c in codecs if c != "none")
+    base = None
+    for codec in codecs:
+        eng = FedEngine(api, clients,
+                        RunConfig(population=population,
+                                  generations=generations, seed=seed,
+                                  backend=engine_backend,
+                                  uplink_codec=codec,
+                                  downlink_codec=codec))
+        t0 = time.time()
+        res = eng.run()
+        s = res.stats
+        rec = {"down_bytes": s.down_bytes, "up_bytes": s.up_bytes,
+               "down_wire_bytes": s.down_wire_bytes,
+               "up_wire_bytes": s.up_wire_bytes,
+               "best_err": float(res.reports[-1].best_err),
+               "wall_s": time.time() - t0}
+        wire_total = s.down_wire_bytes + s.up_wire_bytes
+        if codec == "none":
+            base = res
+        base_total = (base.stats.down_wire_bytes
+                      + base.stats.up_wire_bytes)
+        rec["compression_vs_fp32"] = base_total / wire_total
+        rec["best_err_delta_vs_fp32"] = (
+            rec["best_err"] - float(base.reports[-1].best_err))
+        out["codecs"][codec] = rec
+    return out
+
+
+def codec_trajectory(api=None, clients=None, generations: int = 30,
+                     population: int = 6, seed: int = 0,
+                     codec: str = "int8",
+                     engine_backend: str = "vmap") -> Dict:
+    """Long-horizon search-quality check: ``codec`` (with the engine's
+    server-side error feedback) vs fp32 over ``generations`` rounds on
+    the synthetic task.  The acceptance bar is the final best test-error
+    rates within 2 points — i.e. compression costs bytes, not search
+    quality."""
+    api = api or build_api()
+    if clients is None:
+        clients = build_clients(8, iid=True, n=480, batch=20, test_batch=20)
+    runs = {}
+    for name, spec in (("fp32", "none"), (codec, codec)):
+        res = FedEngine(api, clients,
+                        RunConfig(population=population,
+                                  generations=generations, seed=seed,
+                                  backend=engine_backend,
+                                  uplink_codec=spec,
+                                  downlink_codec=spec)).run()
+        runs[name] = res
+    best = {k: [float(r.best_err) for r in v.reports]
+            for k, v in runs.items()}
+    return {"generations": generations, "codec": codec,
+            "best_err": best,
+            "final_fp32": best["fp32"][-1], "final_codec": best[codec][-1],
+            "final_delta": best[codec][-1] - best["fp32"][-1],
+            "wire_ratio": ((runs["fp32"].stats.down_wire_bytes
+                            + runs["fp32"].stats.up_wire_bytes)
+                           / (runs[codec].stats.down_wire_bytes
+                              + runs[codec].stats.up_wire_bytes))}
+
+
 def summarize_front(api, hist) -> List[Dict]:
     """Final-generation Pareto front -> [{key, err, flops}] (Fig 8)."""
     objs = hist["objs"][-1]
@@ -189,22 +272,7 @@ def save_history(path: str, hist: Dict, extra: Optional[Dict] = None):
         json.dump(rec, f, indent=1)
 
 
-def main():
-    import argparse
-    ap = argparse.ArgumentParser(
-        description="loop vs vmap vs mesh execution-backend comparison")
-    ap.add_argument("--generations", type=int, default=3)
-    ap.add_argument("--population", type=int, default=6)
-    ap.add_argument("--clients", type=int, default=256)
-    ap.add_argument("--samples", type=int, default=2560)
-    ap.add_argument("--image", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=5)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backends", nargs="+",
-                    default=["loop", "vmap", "mesh"],
-                    choices=["loop", "vmap", "mesh"])
-    args = ap.parse_args()
-
+def _run_backend_mode(args) -> Dict:
     clients = build_clients(args.clients, iid=True, n=args.samples,
                             batch=args.batch, test_batch=args.batch,
                             image=args.image)
@@ -231,6 +299,83 @@ def main():
         print(f"mesh vs vmap: CommStats equal: {mv['comm_stats_equal']} | "
               f"max err diff {mv['max_err_diff']:.2e} | "
               f"max master-param diff {mv['max_param_diff']:.2e}")
+    return rep
+
+
+def _run_codec_mode(args) -> Dict:
+    api = build_api()
+    clients = build_clients(args.codec_clients, iid=True,
+                            n=args.codec_samples, batch=20, test_batch=20)
+    rep = compare_codecs(api, clients, generations=args.generations,
+                         population=args.population, seed=args.seed,
+                         codecs=tuple(args.codecs))
+    print(f"\ncodecs ({rep['clients']} clients x {rep['generations']} "
+          f"generations, population {rep['population']}, "
+          f"{rep['engine_backend']} backend):")
+    for codec, r in rep["codecs"].items():
+        print(f"{codec:>6}: down {r['down_wire_bytes'] / 1e6:8.2f} MB | "
+              f"up {r['up_wire_bytes'] / 1e6:8.2f} MB | "
+              f"{r['compression_vs_fp32']:5.2f}x vs fp32 | "
+              f"best err {r['best_err']:.3f} "
+              f"({r['best_err_delta_vs_fp32']:+.3f})")
+    if args.trajectory_generations > 0:
+        traj = codec_trajectory(api, clients,
+                                generations=args.trajectory_generations,
+                                population=args.population, seed=args.seed)
+        rep["trajectory"] = traj
+        print(f"{traj['codec']}+EF vs fp32 over "
+              f"{traj['generations']} generations: final err "
+              f"{traj['final_codec']:.3f} vs {traj['final_fp32']:.3f} "
+              f"(delta {traj['final_delta']:+.3f}) at "
+              f"{traj['wire_ratio']:.2f}x fewer wire bytes")
+    return rep
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="execution-backend and payload-codec comparisons")
+    ap.add_argument("--mode", choices=["backends", "codecs", "both"],
+                    default="both")
+    ap.add_argument("--generations", type=int, default=3)
+    ap.add_argument("--population", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=256,
+                    help="backends mode: client count (the codec mode "
+                         "has its own --codec-* sizing)")
+    ap.add_argument("--samples", type=int, default=2560,
+                    help="backends mode: total samples")
+    ap.add_argument("--image", type=int, default=8,
+                    help="backends mode: image size")
+    ap.add_argument("--batch", type=int, default=5,
+                    help="backends mode: per-client batch size")
+    ap.add_argument("--codec-clients", type=int, default=8,
+                    help="codecs mode: client count")
+    ap.add_argument("--codec-samples", type=int, default=480,
+                    help="codecs mode: total samples")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", nargs="+",
+                    default=["loop", "vmap", "mesh"],
+                    choices=["loop", "vmap", "mesh"])
+    ap.add_argument("--codecs", nargs="+",
+                    default=["none", "cast", "int8", "topk"])
+    ap.add_argument("--trajectory-generations", type=int, default=30,
+                    help="int8-vs-fp32 trajectory length in codec mode "
+                         "(0 disables)")
+    ap.add_argument("--out", default=None,
+                    help="write the report JSON here "
+                         "(e.g. benchmarks/results/codec_compare.json)")
+    args = ap.parse_args()
+
+    rep: Dict = {}
+    if args.mode in ("backends", "both"):
+        rep["backends"] = _run_backend_mode(args)
+    if args.mode in ("codecs", "both"):
+        rep["codecs"] = _run_codec_mode(args)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

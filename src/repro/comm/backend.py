@@ -1,0 +1,121 @@
+"""CodecBackend: encode→decode applied around any execution backend.
+
+The execution backends (``loop`` / ``vmap`` / ``mesh``) answer *how*
+client work is dispatched; this wrapper answers *what crosses the wire*
+around those dispatches, uniformly for every strategy x backend pair:
+
+  * **downlink** — every parameter tree a client receives (the master a
+    round trains from / evaluates, the per-individual inits of the
+    offline baseline) is replaced by its ``downlink.roundtrip`` — the
+    reconstruction of the compressed broadcast.
+  * **uplink** — the aggregated master update (what the fill-aggregated
+    uploads change about the master, ``raw - sent_down``) is replaced by
+    its error-feedback-compressed reconstruction
+    (``repro.comm.error_feedback``): persistent-model paths
+    (``train_fill``, Algorithm 3; ``train_fedavg``, Algorithm 1) carry a
+    per-stream residual so the lossy uplink stays unbiased over rounds;
+    the offline baseline's per-round reinitialized individuals are
+    ephemeral, so their updates get a plain (residual-free) roundtrip.
+
+Compression is simulated at the aggregate boundary — per-client wire
+*bytes* are still charged per upload by the strategies' ``CommStats``
+accounting, but the information loss is applied once to the aggregated
+update.  That choice is what guarantees backend parity: the transform is
+a deterministic function of the (already parity-tested) aggregate, so
+``loop``/``vmap``/``mesh`` keep producing identical CommStats and
+masters within the usual 1e-5 under any codec, and the fused mesh
+shard_map programs stay intact.
+
+The wrapper implements the full ``ExecutionBackend`` protocol (and
+proxies ``dispatches``), so ``FedEngine`` treats it as just another
+backend; it is only constructed when at least one codec is not
+``"none"``, so codec-free runs take the exact pre-subsystem path.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.comm.codec import PayloadCodec
+from repro.comm.error_feedback import ErrorFeedback, _tree_add, _tree_sub
+
+Params = Any
+
+
+class CodecBackend:
+    """Wrap ``inner`` with uplink/downlink payload codecs."""
+
+    def __init__(self, inner, uplink: PayloadCodec, downlink: PayloadCodec):
+        self.inner = inner
+        self.uplink = uplink
+        self.downlink = downlink
+        self._ef = {"fill": ErrorFeedback(uplink),
+                    "fedavg": ErrorFeedback(uplink)}
+
+    # -- engine plumbing -----------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    @property
+    def dispatches(self) -> int:
+        return self.inner.dispatches
+
+    @dispatches.setter
+    def dispatches(self, value: int) -> None:
+        self.inner.dispatches = value
+
+    def reset(self) -> None:
+        """Drop error-feedback residuals (``FedEngine.run`` re-entrancy)."""
+        for ef in self._ef.values():
+            ef.reset()
+
+    # -- codec application ---------------------------------------------------
+
+    def _down(self, params: Params) -> Params:
+        return self.downlink.roundtrip(params)
+
+    def _up(self, sent_down: Params, raw: Params,
+            stream: Optional[str] = None) -> Params:
+        """Receiver-side master after the uplink codec: ``sent_down`` plus
+        the (EF-)compressed reconstruction of ``raw - sent_down``.
+        ``stream`` names the error-feedback residual to carry; ``None``
+        (ephemeral models) compresses without a residual."""
+        if self.uplink.is_identity:
+            return raw
+        delta = _tree_sub(raw, sent_down)
+        sent = self._ef[stream].step(delta) if stream is not None \
+            else self.uplink.roundtrip(delta)
+        new = _tree_add(sent_down, sent)
+        return jax.tree.map(lambda n, r: n.astype(r.dtype), new, raw)
+
+    # -- ExecutionBackend protocol -------------------------------------------
+
+    def train_fill(self, master: Params, keys, groups, lr: float) -> Params:
+        m_down = self._down(master)
+        raw = self.inner.train_fill(m_down, keys, groups, lr)
+        return self._up(m_down, raw, "fill")
+
+    def train_fedavg(self, params: Params, key, client_ids,
+                     lr: float) -> Params:
+        p_down = self._down(params)
+        raw = self.inner.train_fedavg(p_down, key, client_ids, lr)
+        return self._up(p_down, raw, "fedavg")
+
+    def train_fedavg_population(self, params_list: Sequence[Params], keys,
+                                client_ids, lr: float) -> List[Params]:
+        downs = [self._down(p) for p in params_list]
+        raws = self.inner.train_fedavg_population(downs, keys,
+                                                  client_ids, lr)
+        return [self._up(d, r, stream=None) for d, r in zip(downs, raws)]
+
+    def eval_shared(self, params: Params, keys, client_ids) -> np.ndarray:
+        return self.inner.eval_shared(self._down(params), keys, client_ids)
+
+    def eval_paired(self, params_list: Sequence[Params], keys,
+                    client_ids) -> np.ndarray:
+        return self.inner.eval_paired([self._down(p) for p in params_list],
+                                      keys, client_ids)

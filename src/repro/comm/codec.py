@@ -1,0 +1,141 @@
+"""Payload codecs: what one parameter payload costs on the wire, and what
+the receiver reconstructs.
+
+The paper's headline requirement is that real-time federated NAS "reduce
+the local payload"; this module makes the payload encoding a first-class,
+pluggable axis next to the execution backend.  A ``PayloadCodec`` answers
+two questions:
+
+  * ``wire_bytes(n_params)`` — bytes one encoded payload of ``n_params``
+    parameters occupies on the wire (``CommStats`` wire-byte accounting;
+    deterministic and backend-independent, so every execution backend
+    reports identical stats).
+  * ``roundtrip(tree)``      — ``decode(encode(tree))`` as one on-device
+    transform: the *reconstruction* the receiver would see.  The runtime
+    simulates federation on one host, so the wire format itself is never
+    materialized — only its information loss (and its byte cost) are.
+
+Codecs are pure and stateless; server-side error-feedback state lives in
+``repro.comm.error_feedback`` and the engine wiring in
+``repro.comm.backend``.  Specs are strings validated at ``RunConfig``
+construction time (same pattern as ``aggregate_backend``):
+
+    "none"                      fp32 passthrough (4 B/param)
+    "cast" | "cast:bf16"        bfloat16 cast (2 B/param)
+    "cast:fp16"                 float16 cast (2 B/param)
+    "int8" | "int8:pallas"      per-tensor symmetric int8 quantization
+                                (1 B/param + 4 B scale per tensor;
+                                ":pallas" routes the quantize/dequantize
+                                through the ``repro.kernels.quantize``
+                                Pallas kernel, ":xla" / bare through the
+                                jnp reference)
+    "topk" | "topk:<ratio>"     magnitude top-k sparsification (8 B per
+                                kept (index, value) pair; default ratio
+                                0.1)
+
+Only floating-point leaves are transformed; integer/bool leaves (none in
+the current master trees) pass through untouched and are charged fp32
+wire bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+CODEC_NAMES = ("none", "cast", "int8", "topk")
+
+SCALE_BYTES = 4         # one float32 scale per quantized tensor
+TOPK_ENTRY_BYTES = 8    # int32 flat index + float32 value per kept entry
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)
+
+
+def tree_map_float(fn, tree: Params) -> Params:
+    """Apply ``fn`` to floating leaves, pass the rest through."""
+    return jax.tree.map(lambda x: fn(x) if _is_float(x) else x, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadCodec:
+    """Base codec: fp32 passthrough (``"none"``).
+
+    Frozen dataclasses so codecs hash/compare by configuration — two
+    engines built from the same ``RunConfig`` share jit caches.
+    """
+
+    name: str = "none"
+
+    def wire_bytes(self, n_params: int) -> float:
+        """Wire size of one encoded payload of ``n_params`` parameters."""
+        return 4.0 * n_params
+
+    def roundtrip(self, tree: Params) -> Params:
+        """``decode(encode(tree))`` — the receiver's reconstruction."""
+        return tree
+
+    @property
+    def is_identity(self) -> bool:
+        return type(self) is PayloadCodec
+
+
+@dataclasses.dataclass(frozen=True)
+class CastCodec(PayloadCodec):
+    """Downcast to a 16-bit float on the wire (2 B/param), upcast back."""
+
+    name: str = "cast"
+    dtype: str = "bf16"     # "bf16" | "fp16"
+
+    def wire_bytes(self, n_params: int) -> float:
+        return 2.0 * n_params
+
+    def roundtrip(self, tree: Params) -> Params:
+        wire = jnp.bfloat16 if self.dtype == "bf16" else jnp.float16
+        return tree_map_float(
+            lambda x: x.astype(wire).astype(x.dtype), tree)
+
+
+def make_codec(spec: str) -> PayloadCodec:
+    """Build a codec from its string spec; raise ``ValueError`` (with the
+    available names) on anything unknown — called by
+    ``RunConfig.__post_init__`` so bad specs fail at config time."""
+    from repro.comm.quantize import Int8Codec
+    from repro.comm.sparsify import TopKCodec
+
+    if not isinstance(spec, str):
+        raise ValueError(f"codec spec must be a string, got {spec!r}")
+    head, _, arg = spec.partition(":")
+    if head == "none" and not arg:
+        return PayloadCodec()
+    if head == "cast":
+        if arg in ("", "bf16", "fp16"):
+            return CastCodec(dtype=arg or "bf16")
+        raise ValueError(
+            f"unknown cast dtype {arg!r} in codec spec {spec!r}; "
+            f"available: ['bf16', 'fp16']")
+    if head == "int8":
+        if arg in ("", "xla", "pallas"):
+            return Int8Codec(backend=arg or "xla")
+        raise ValueError(
+            f"unknown int8 backend {arg!r} in codec spec {spec!r}; "
+            f"available: ['xla', 'pallas']")
+    if head == "topk":
+        if not arg:
+            return TopKCodec()
+        try:
+            ratio = float(arg)
+        except ValueError:
+            ratio = -1.0
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(
+                f"topk ratio must be in (0, 1], got {arg!r} "
+                f"in codec spec {spec!r}")
+        return TopKCodec(ratio=ratio)
+    raise ValueError(
+        f"unknown payload codec {spec!r}; available: {list(CODEC_NAMES)}")

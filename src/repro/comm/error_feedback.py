@@ -1,0 +1,75 @@
+"""Server-side error feedback for lossy uplink codecs.
+
+Lossy compressors are biased (top-k systematically, int8/cast by
+rounding); applied round after round to Algorithm 3's master update the
+bias would accumulate.  Error feedback (Seide et al. 2014; Karimireddy
+et al. 2019) fixes that by carrying the compression error forward:
+
+    sent_t     = C(delta_t + residual_{t-1})
+    residual_t = (delta_t + residual_{t-1}) - sent_t
+
+so the applied updates *telescope*:
+
+    sum_t sent_t = sum_t delta_t + residual_0 - residual_T
+
+— the cumulative applied update differs from the cumulative true update
+by exactly the final residual, a single-step compression error that does
+not grow with T (asserted by ``tests/test_comm.py``).
+
+The residual lives on the *server*: this runtime's clients are ephemeral
+(double sampling redraws the client groups every round), so the one
+persistent place compression error can be carried is around the
+aggregated master update — ``repro.comm.backend.CodecBackend`` applies
+``step`` to the fill-aggregated delta, which also keeps the transform
+identical (and therefore parity-safe) across the loop/vmap/mesh
+execution backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codec import PayloadCodec, tree_map_float
+
+
+def _zeros_like_float(tree):
+    return tree_map_float(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _float_op(op):
+    """Elementwise float32 op on floating leaves; non-float leaves (none
+    in the current master trees) pass the first argument through."""
+    def leaf(x, y):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
+            return x
+        return op(x.astype(jnp.float32), y.astype(jnp.float32))
+
+    return jax.jit(lambda a, b: jax.tree.map(leaf, a, b))
+
+
+_tree_add = _float_op(jnp.add)
+_tree_sub = _float_op(jnp.subtract)
+
+
+class ErrorFeedback:
+    """One compression stream's residual state (reset per ``run()``)."""
+
+    def __init__(self, codec: PayloadCodec):
+        self.codec = codec
+        self.residual = None
+
+    def reset(self) -> None:
+        self.residual = None
+
+    def step(self, delta):
+        """Compress ``delta`` with the carried residual folded in; update
+        the residual; return what the receiver reconstructs."""
+        if self.codec.is_identity:
+            return delta
+        if self.residual is None:
+            self.residual = _zeros_like_float(delta)
+        target = _tree_add(delta, self.residual)
+        sent = self.codec.roundtrip(target)
+        self.residual = _tree_sub(target, sent)
+        return sent

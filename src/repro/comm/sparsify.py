@@ -1,0 +1,54 @@
+"""Top-k payload codec: magnitude sparsification.
+
+Each floating leaf keeps its ``k = max(1, round(ratio * size))``
+largest-magnitude entries (flat ``lax.top_k`` indices, so ties resolve
+deterministically by position) and zeroes the rest.  The wire carries one
+(int32 flat index, float32 value) pair per kept entry —
+``TOPK_ENTRY_BYTES`` each — i.e. ``8 * ratio`` bytes per parameter.
+
+Top-k is a *biased* compressor (it systematically drops small
+coordinates), so on the uplink it is composed with the server-side
+error-feedback residual in ``repro.comm.error_feedback`` — what is
+dropped this round is carried into the next round's payload, and
+Algorithm 3's fill-aggregation stays unbiased over rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codec import TOPK_ENTRY_BYTES, PayloadCodec, tree_map_float
+
+
+def leaf_k(size: int, ratio: float) -> int:
+    """Entries kept for a ``size``-element tensor (always at least 1)."""
+    return max(1, min(size, int(round(ratio * size))))
+
+
+@functools.partial(jax.jit, static_argnames=("ratio",))
+def _roundtrip(tree, ratio: float):
+    def leaf(x):
+        xf = x.reshape(-1).astype(jnp.float32)
+        k = leaf_k(xf.size, ratio)
+        _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        out = jnp.zeros_like(xf).at[idx].set(xf[idx])
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return tree_map_float(leaf, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(PayloadCodec):
+    """Keep the ``ratio`` largest-magnitude entries per tensor."""
+
+    name: str = "topk"
+    ratio: float = 0.1
+
+    def wire_bytes(self, n_params: int) -> float:
+        return TOPK_ENTRY_BYTES * leaf_k(max(n_params, 1), self.ratio)
+
+    def roundtrip(self, tree):
+        return _roundtrip(tree, self.ratio)

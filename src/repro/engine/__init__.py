@@ -8,9 +8,12 @@ Backends: "loop" (reference, one dispatch per (individual, client)
 pair), "vmap" (ClientBatch-stacked, O(population) dispatches per
 generation — constant in the number of clients) and "mesh" (population
 axis sharded over a jax device mesh, O(population / devices)
-dispatches).  See docs/architecture.md for the full matrix and the
-round lifecycle.
+dispatches).  Payload codecs (``RunConfig.uplink_codec`` /
+``downlink_codec`` -> ``repro.comm``) compress what crosses the wire
+around any strategy x backend pair.  See docs/architecture.md for the
+full matrix, the round lifecycle and the codec semantics.
 """
+from repro.comm import CodecBackend, PayloadCodec, make_codec
 from repro.engine.backends import BACKENDS, BACKEND_NAMES, \
     ExecutionBackend, LoopBackend, VmapBackend, make_backend
 from repro.engine.engine import FedEngine
@@ -23,8 +26,9 @@ from repro.engine.types import AGGREGATE_BACKENDS, BYTES_PER_PARAM, \
 
 __all__ = [
     "AGGREGATE_BACKENDS", "BACKENDS", "BACKEND_NAMES", "BYTES_PER_PARAM",
-    "CommStats", "ERROR_COUNT_BYTES", "EngineResult", "ExecutionBackend",
-    "FedAvgBaseline", "FedEngine", "LoopBackend", "MeshBackend",
-    "OfflineNas", "RealTimeNas", "RoundReport", "RunConfig", "Strategy",
-    "VmapBackend", "history_dict", "make_backend",
+    "CodecBackend", "CommStats", "ERROR_COUNT_BYTES", "EngineResult",
+    "ExecutionBackend", "FedAvgBaseline", "FedEngine", "LoopBackend",
+    "MeshBackend", "OfflineNas", "PayloadCodec", "RealTimeNas",
+    "RoundReport", "RunConfig", "Strategy", "VmapBackend", "history_dict",
+    "make_backend", "make_codec",
 ]

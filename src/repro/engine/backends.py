@@ -27,6 +27,14 @@ Every backend routes Algorithm 3 through ``RunConfig.aggregate_backend``
 identically: ``"xla"`` is the jnp reference, ``"pallas"`` the
 ``repro.kernels.fill_aggregate`` TPU kernel (interpret-mode off-TPU).
 Unknown values are rejected by ``RunConfig`` at construction time.
+
+Payload codecs never appear in this module: when
+``RunConfig.uplink_codec`` / ``downlink_codec`` select a lossy codec,
+``FedEngine`` wraps whichever backend it built in
+``repro.comm.backend.CodecBackend``, which applies encode->decode around
+these train/eval entry points uniformly — so the dispatch math here (and
+in ``mesh_backend``) stays codec-free and every backend sees identical
+compressed inputs.
 """
 from __future__ import annotations
 

@@ -19,6 +19,7 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.comm import CodecBackend, make_codec
 from repro.core.double_sampling import sample_participants
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientDataset
@@ -63,6 +64,15 @@ class FedEngine:
                                         api, self.clients, self.cfg)
         else:
             self.backend = backend
+        # payload codecs (repro.comm): strategies read these for wire-byte
+        # accounting; lossy codecs additionally wrap the execution backend
+        # so encode->decode happens around every client train/eval
+        self.uplink_codec = make_codec(self.cfg.uplink_codec)
+        self.downlink_codec = make_codec(self.cfg.downlink_codec)
+        if not (self.uplink_codec.is_identity
+                and self.downlink_codec.is_identity):
+            self.backend = CodecBackend(self.backend, self.uplink_codec,
+                                        self.downlink_codec)
         self.rng = np.random.default_rng(self.cfg.seed)
         self.stats = CommStats()
         self.reports: list[RoundReport] = []
@@ -81,6 +91,9 @@ class FedEngine:
         self.stats = CommStats()
         self.reports = []
         self.backend.dispatches = 0
+        reset = getattr(self.backend, "reset", None)
+        if reset is not None:        # CodecBackend: drop EF residuals
+            reset()
         self.strategy.setup(self)
         t0 = time.time()
         for gen in range(1, cfg.generations + 1):

@@ -45,6 +45,13 @@ is imported; this is how CI exercises an 8-way mesh).
 ``"xla"`` uses the fused partial-sum path above; ``"pallas"`` returns
 the sharded uploads and routes Algorithm 3 through the
 ``repro.kernels.fill_aggregate`` kernel via ``fill_aggregate_stacked``.
+
+Payload codecs (``RunConfig.uplink_codec`` / ``downlink_codec``) are
+likewise honored without touching the shard_map programs: ``FedEngine``
+wraps this backend in ``repro.comm.backend.CodecBackend``, which
+compresses the master each program consumes and the aggregated update
+each ``train_fill`` produces — the fused SGD+Algorithm-3 psum path and
+its reduction-order guarantees are codec-independent.
 """
 from __future__ import annotations
 

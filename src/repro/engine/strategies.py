@@ -58,26 +58,33 @@ class Strategy(Protocol):
 def _account_train(engine, keys, groups, download_models: bool):
     """Training-phase traffic of one fill-aggregated generation: payload
     down (t == 1 only — later rounds inherit weights already on device),
-    payload up, one local pass per (individual, client) pair."""
+    payload up, one local pass per (individual, client) pair.  Logical
+    bytes are fp32; wire bytes come from the run's payload codecs."""
     stats, api = engine.stats, engine.api
+    down, up = engine.downlink_codec, engine.uplink_codec
     for key, group in zip(keys, groups):
         payload = api.payload_params(key)
         for _ in group:
             if download_models:
-                stats.add_download(payload)      # theta^q + key (t == 1)
-            stats.add_upload(payload)
+                stats.add_download(payload,      # theta^q + key (t == 1)
+                                   wire_bytes=down.wire_bytes(payload))
+            stats.add_upload(payload, wire_bytes=up.wire_bytes(payload))
             stats.client_train_passes += 1
 
 
 def _account_eval(engine, n_keys: int, n_participants: int,
                   master_params: Optional[int] = None):
-    """Fitness-phase traffic (Section IV.G): the master download (real-time
-    method only), the n_keys choice-key downloads, and one error-count
-    upload per (key, client) pair."""
+    """Fitness-phase traffic (Section IV.G): the aggregated-model
+    download when the strategy broadcasts one (real-time NAS's master,
+    the FedAvg baseline's model — at downlink-codec wire size), the
+    n_keys choice-key downloads, and one error-count upload per
+    (key, client) pair (keys and counts are already minimal encodings —
+    wire == logical)."""
     stats, api = engine.stats, engine.api
     if master_params is not None:
-        stats.add_eval_download_bytes(BYTES_PER_PARAM * master_params,
-                                      copies=n_participants)
+        stats.add_eval_download_bytes(
+            BYTES_PER_PARAM * master_params, copies=n_participants,
+            wire_nbytes=engine.downlink_codec.wire_bytes(master_params))
     stats.add_eval_download_bytes(api.key_bytes * n_keys,
                                   copies=n_participants)
     stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * n_keys,
@@ -173,16 +180,20 @@ class OfflineNas:
             self._reinit_seed += 1
             # REINITIALIZED from scratch — the paper's central criticism
             inits.append(api.init(jax.random.PRNGKey(self._reinit_seed)))
+        down, up = engine.downlink_codec, engine.uplink_codec
         payloads = [api.payload_params(k) for k in keys]
         for payload in payloads:                 # every client trains
-            stats.add_download(payload, copies=m)
-            stats.add_upload(payload, copies=m)
+            stats.add_download(payload, copies=m,
+                               wire_bytes=down.wire_bytes(payload))
+            stats.add_upload(payload, copies=m,
+                             wire_bytes=up.wire_bytes(payload))
             stats.client_train_passes += m
         models = backend.train_fedavg_population(inits, keys,
                                                  participants, lr)
         for payload in payloads:                 # aggregated model for eval
-            stats.add_eval_download_bytes(BYTES_PER_PARAM * payload,
-                                          copies=m)
+            stats.add_eval_download_bytes(
+                BYTES_PER_PARAM * payload, copies=m,
+                wire_nbytes=down.wire_bytes(payload))
         stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * len(keys), copies=m)
         errs = backend.eval_paired(models, keys, participants)
         fl = [api.flops(k) for k in keys]
@@ -228,8 +239,12 @@ class FedAvgBaseline:
         stats, api, backend = engine.stats, engine.api, engine.backend
         m = len(participants)
         payload = api.payload_params(self.key)
-        stats.add_download(payload, copies=m)
-        stats.add_upload(payload, copies=m)
+        stats.add_download(
+            payload, copies=m,
+            wire_bytes=engine.downlink_codec.wire_bytes(payload))
+        stats.add_upload(
+            payload, copies=m,
+            wire_bytes=engine.uplink_codec.wire_bytes(payload))
         stats.client_train_passes += m
         self.params = backend.train_fedavg(self.params, self.key,
                                            participants, lr)

@@ -4,10 +4,14 @@
 training-phase traffic (sub-model downloads/uploads, Algorithm 3/4) and the
 evaluation-phase traffic the paper's Section IV.G comparison needs: the 2N
 choice-key downloads before fitness evaluation and the per-client
-error-count uploads afterwards.  ``RoundReport`` is the typed per-round
-history record every strategy produces; ``history_dict`` flattens a list of
-reports into the legacy dict-of-lists layout that ``rt_enas.run`` /
-``offline_enas.run`` used to return.
+error-count uploads afterwards.  Every byte is counted twice: once as
+fp32-*logical* bytes (``BYTES_PER_PARAM`` per parameter — the paper's
+Section IV.G unit, codec-independent) and once as *wire* bytes (what the
+``RunConfig.uplink_codec`` / ``downlink_codec`` payload codecs actually
+put on the network — ``repro.comm``).  ``RoundReport`` is the typed
+per-round history record every strategy produces; ``history_dict``
+flattens a list of reports into the legacy dict-of-lists layout that
+``rt_enas.run`` / ``offline_enas.run`` used to return.
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-BYTES_PER_PARAM = 4        # float32 payloads
+BYTES_PER_PARAM = 4        # float32 logical payloads
 ERROR_COUNT_BYTES = 4      # one int32 error count per evaluated sub-model
 
 
@@ -57,6 +61,18 @@ class RunConfig:
         engine builds the backend.
       * ``vmap_eval_tile`` — clients evaluated per inner vmap tile in
         the vmap backend's forward-only eval path (>= 1).
+
+    Communication (``repro.comm``; validated here like
+    ``aggregate_backend``):
+      * ``uplink_codec`` — payload codec for client->server transfers
+        (trained sub-model uploads).  ``"none"`` (fp32), ``"cast"`` /
+        ``"cast:fp16"`` (16-bit float), ``"int8"`` / ``"int8:pallas"``
+        (per-tensor symmetric quantization), ``"topk"`` /
+        ``"topk:<ratio>"`` (magnitude sparsification).  Lossy uplink
+        codecs compose with server-side error feedback on the
+        persistent-master paths.
+      * ``downlink_codec`` — same spec grammar for server->client
+        transfers (master broadcasts / sub-model downloads).
     """
     population: int = 10
     generations: int = 500
@@ -71,6 +87,8 @@ class RunConfig:
     aggregate_backend: str = "xla"      # Algorithm 3 route: 'xla' | 'pallas'
     backend: str = "loop"               # execution: 'loop' | 'vmap' | 'mesh'
     vmap_eval_tile: int = 32            # clients vmapped per eval scan step
+    uplink_codec: str = "none"          # client->server payload codec
+    downlink_codec: str = "none"        # server->client payload codec
 
     def __post_init__(self):
         if self.aggregate_backend not in AGGREGATE_BACKENDS:
@@ -80,23 +98,53 @@ class RunConfig:
         if self.vmap_eval_tile < 1:
             raise ValueError(
                 f"vmap_eval_tile must be >= 1, got {self.vmap_eval_tile}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+        if self.population < 2:
+            raise ValueError(
+                f"population must be >= 2 (NSGA-II needs parents to "
+                f"recombine), got {self.population}")
+        if self.lr0 < 0:
+            raise ValueError(f"lr0 must be >= 0, got {self.lr0}")
+        if self.local_epochs < 0:
+            raise ValueError(
+                f"local_epochs must be >= 0, got {self.local_epochs}")
+        # codec specs fail here, at config time (ValueError lists the
+        # available names) — the engine re-parses them when wiring
+        from repro.comm import make_codec
+        make_codec(self.uplink_codec)
+        make_codec(self.downlink_codec)
 
 
 @dataclasses.dataclass
 class CommStats:
     """Cumulative server<->client traffic and compute of one run.
 
-    All byte fields are *logical wire bytes* (float32 payloads, i.e.
-    ``BYTES_PER_PARAM`` per parameter) — what the paper's Section IV.G
-    cost comparison counts, independent of the execution backend.  Every
-    backend therefore produces identical CommStats for the same seed.
+    Every transfer is counted on two ledgers, both independent of the
+    execution backend (accounting lives in the strategies, never in the
+    dispatch layer — so all backends produce identical CommStats for the
+    same seed and codec):
+
+      * **logical bytes** (``down_bytes`` / ``up_bytes`` and the eval
+        subsets) — fp32 payloads, ``BYTES_PER_PARAM`` per parameter: the
+        paper's Section IV.G cost unit, independent of the codec, so
+        cost comparisons against the paper survive any compression
+        setting.
+      * **wire bytes** (``down_wire_bytes`` / ``up_wire_bytes``) — what
+        the ``repro.comm`` payload codecs actually put on the network
+        (``PayloadCodec.wire_bytes``).  With ``"none"`` codecs wire ==
+        logical.  Choice keys and error counts are already minimal
+        encodings and cross the wire uncompressed on both ledgers.
 
     Fields:
-      * ``down_bytes``   — total server->client bytes: sub-model payload
-        downloads (training phase) PLUS the evaluation-phase master /
-        choice-key downloads.
-      * ``up_bytes``     — total client->server bytes: sub-model uploads
-        PLUS the evaluation-phase error-count uploads.
+      * ``down_bytes``   — total logical server->client bytes: sub-model
+        payload downloads (training phase) PLUS the evaluation-phase
+        master / choice-key downloads.
+      * ``up_bytes``     — total logical client->server bytes: sub-model
+        uploads PLUS the evaluation-phase error-count uploads.
+      * ``down_wire_bytes`` / ``up_wire_bytes`` — the same transfers at
+        codec wire size.
       * ``client_train_passes`` — number of (individual, client) local
         training passes (E local epochs each), the paper's compute unit.
       * ``eval_down_bytes`` / ``eval_up_bytes`` — the fitness-phase
@@ -110,24 +158,45 @@ class CommStats:
     client_train_passes: int = 0
     eval_down_bytes: float = 0.0        # subset of down_bytes (fitness phase)
     eval_up_bytes: float = 0.0          # subset of up_bytes (fitness phase)
+    down_wire_bytes: float = 0.0        # codec wire size of down_bytes
+    up_wire_bytes: float = 0.0          # codec wire size of up_bytes
 
-    def add_download(self, params: int, copies: int = 1):
-        """Account ``copies`` sub-model downloads of ``params`` params."""
+    def add_download(self, params: int, copies: int = 1,
+                     wire_bytes: Optional[float] = None):
+        """Account ``copies`` sub-model downloads of ``params`` params;
+        ``wire_bytes`` is the per-payload codec wire size (defaults to
+        the fp32-logical size)."""
         self.down_bytes += BYTES_PER_PARAM * params * copies
+        self.down_wire_bytes += (BYTES_PER_PARAM * params
+                                 if wire_bytes is None
+                                 else wire_bytes) * copies
 
-    def add_upload(self, params: int, copies: int = 1):
-        """Account ``copies`` sub-model uploads of ``params`` params."""
+    def add_upload(self, params: int, copies: int = 1,
+                   wire_bytes: Optional[float] = None):
+        """Account ``copies`` sub-model uploads of ``params`` params;
+        ``wire_bytes`` as in ``add_download``."""
         self.up_bytes += BYTES_PER_PARAM * params * copies
+        self.up_wire_bytes += (BYTES_PER_PARAM * params
+                               if wire_bytes is None
+                               else wire_bytes) * copies
 
-    def add_eval_download_bytes(self, nbytes: float, copies: int = 1):
-        """Account fitness-phase downloads of ``nbytes`` bytes each."""
+    def add_eval_download_bytes(self, nbytes: float, copies: int = 1,
+                                wire_nbytes: Optional[float] = None):
+        """Account fitness-phase downloads of ``nbytes`` logical bytes
+        each (``wire_nbytes`` at codec size; defaults to ``nbytes``)."""
         self.down_bytes += nbytes * copies
         self.eval_down_bytes += nbytes * copies
+        self.down_wire_bytes += (nbytes if wire_nbytes is None
+                                 else wire_nbytes) * copies
 
-    def add_eval_upload_bytes(self, nbytes: float, copies: int = 1):
-        """Account fitness-phase uploads of ``nbytes`` bytes each."""
+    def add_eval_upload_bytes(self, nbytes: float, copies: int = 1,
+                              wire_nbytes: Optional[float] = None):
+        """Account fitness-phase uploads of ``nbytes`` logical bytes
+        each (``wire_nbytes`` at codec size; defaults to ``nbytes``)."""
         self.up_bytes += nbytes * copies
         self.eval_up_bytes += nbytes * copies
+        self.up_wire_bytes += (nbytes if wire_nbytes is None
+                               else wire_nbytes) * copies
 
 
 @dataclasses.dataclass

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import expert_gemm as _eg
 from repro.kernels import fill_aggregate as _fa
 from repro.kernels import flash_attention as _flash
+from repro.kernels import quantize as _q
 from repro.kernels import ssd_scan as _ssd
 
 INTERPRET = True
@@ -61,6 +62,18 @@ def fill_aggregate(clients, masks, weights, prev):
 def expert_gemm(x, w):
     """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
     return _eg.expert_gemm(x, w, interpret=INTERPRET)
+
+
+@jax.jit
+def quantize_int8(x, scale):
+    """x: (P,) float; scale: scalar -> (P,) int8 (symmetric grid)."""
+    return _q.quantize_int8(x, scale, interpret=INTERPRET)
+
+
+@jax.jit
+def dequantize_int8(q, scale):
+    """q: (P,) int8; scale: scalar -> (P,) float32 (``q * scale``)."""
+    return _q.dequantize_int8(q, scale, interpret=INTERPRET)
 
 
 @jax.jit

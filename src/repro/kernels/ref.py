@@ -70,3 +70,16 @@ def fill_aggregate(clients, masks, weights, prev):
 def expert_gemm(x, w):
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+def quantize_int8(x, scale):
+    """x: (P,) float; scale: scalar -> (P,) int8 on the symmetric
+    255-level grid (round-to-nearest-even, clipped to [-127, 127])."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / jnp.float32(scale)), -127.0, 127.0)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    """q: (P,) int8; scale: scalar -> (P,) ``dtype`` (``q * scale``)."""
+    return (q.astype(jnp.float32) * jnp.float32(scale)).astype(dtype)

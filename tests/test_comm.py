@@ -1,0 +1,297 @@
+"""repro.comm: codec roundtrip bounds (hypothesis), error-feedback
+telescoping, wire-byte accounting, RunConfig validation, and per-codec
+backend parity (loop == vmap == mesh CommStats and masters).
+
+The parity block is the codec leg of the engine parity suite — CI also
+runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+so the mesh backend shards over a real 8-way mesh with ``int8`` uplink.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to fixed-seed examples
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.comm import (
+    CastCodec, ErrorFeedback, Int8Codec, PayloadCodec, TopKCodec,
+    make_codec,
+)
+from repro.comm.sparsify import leaf_k
+from repro.configs import get_config
+from repro.core import make_api
+from repro.data import make_classification, make_clients, partition_iid
+from repro.engine import FedEngine, RunConfig
+
+# strategy: small non-degenerate float vectors (bounded away from the
+# fp16 overflow range; codecs are scale-relative so magnitude is free)
+vectors = st.lists(
+    st.floats(min_value=-100.0, max_value=100.0), min_size=1, max_size=64,
+).map(lambda l: np.asarray(l, np.float32))
+
+
+def _max_abs(x):
+    return float(np.max(np.abs(np.asarray(x, np.float32))))
+
+
+# ---------------------------------------------------------------------------
+# codec spec parsing / validation
+# ---------------------------------------------------------------------------
+
+def test_make_codec_specs():
+    assert isinstance(make_codec("none"), PayloadCodec)
+    assert make_codec("none").is_identity
+    assert make_codec("cast") == CastCodec(dtype="bf16")
+    assert make_codec("cast:fp16") == CastCodec(dtype="fp16")
+    assert make_codec("int8") == Int8Codec(backend="xla")
+    assert make_codec("int8:pallas") == Int8Codec(backend="pallas")
+    assert make_codec("topk") == TopKCodec(ratio=0.1)
+    assert make_codec("topk:0.25") == TopKCodec(ratio=0.25)
+    for codec in ("cast", "int8", "topk"):
+        assert not make_codec(codec).is_identity
+
+
+@pytest.mark.parametrize("bad", [
+    "zip", "cast:f8", "int8:gpu", "topk:0", "topk:2.0", "topk:x", ""])
+def test_make_codec_rejects_unknown(bad):
+    with pytest.raises(ValueError):
+        make_codec(bad)
+
+
+def test_wire_bytes_per_codec():
+    n = 10_000
+    assert make_codec("none").wire_bytes(n) == 4 * n
+    assert make_codec("cast").wire_bytes(n) == 2 * n
+    assert make_codec("int8").wire_bytes(n) == n + 4
+    # topk: 8 bytes per kept (index, value) entry
+    assert make_codec("topk:0.1").wire_bytes(n) == 8 * (n // 10)
+    assert make_codec("topk:1.0").wire_bytes(n) == 8 * n
+
+
+# ---------------------------------------------------------------------------
+# roundtrip bounds (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(vectors)
+def test_cast_roundtrip_bound(x):
+    """bf16 keeps 8 mantissa bits: relative error <= 2^-8 elementwise."""
+    rt = np.asarray(make_codec("cast").roundtrip(jnp.asarray(x)))
+    assert np.all(np.abs(rt - x) <= np.abs(x) * 2.0 ** -8 + 1e-30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(vectors)
+def test_int8_roundtrip_bound(x):
+    """Symmetric int8: error <= scale/2 = max|x|/254 elementwise."""
+    for spec in ("int8", "int8:pallas"):
+        rt = np.asarray(make_codec(spec).roundtrip(jnp.asarray(x)))
+        bound = _max_abs(x) / 254.0 + 1e-6
+        assert np.all(np.abs(rt - x) <= bound), spec
+
+
+def test_int8_pallas_matches_xla_route():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.normal(size=(513,)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(8, 33)), jnp.float32)}
+    a = make_codec("int8").roundtrip(tree)
+    b = make_codec("int8:pallas").roundtrip(tree)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vectors, st.floats(min_value=0.05, max_value=1.0))
+def test_topk_exact_k_sparsity(x, ratio):
+    """Exactly k = max(1, round(ratio*n)) surviving entries (inputs are
+    a.s. nonzero), and they are the k largest magnitudes."""
+    x = (x + np.where(x >= 0, 1e-3, -1e-3)).astype(np.float32)  # nonzero
+    k = leaf_k(x.size, ratio)
+    rt = np.asarray(make_codec(f"topk:{ratio}").roundtrip(jnp.asarray(x)))
+    kept = np.nonzero(rt)[0]
+    assert len(kept) == k
+    np.testing.assert_array_equal(rt[kept], x[kept])
+    # no dropped entry is strictly larger than a kept one
+    dropped = np.setdiff1d(np.arange(x.size), kept)
+    if dropped.size:
+        assert np.abs(x[dropped]).max() <= np.abs(x[kept]).min() + 1e-12
+
+
+def test_codecs_pass_integer_leaves_through():
+    tree = {"w": jnp.ones((16,), jnp.float32),
+            "step": jnp.asarray([3], jnp.int32)}
+    for spec in ("cast", "int8", "topk:0.5"):
+        rt = make_codec(spec).roundtrip(tree)
+        np.testing.assert_array_equal(np.asarray(rt["step"]), [3])
+
+
+# ---------------------------------------------------------------------------
+# error feedback: bias telescopes to the final residual
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["topk:0.1", "int8", "cast"])
+def test_error_feedback_telescopes(spec):
+    """sum_t sent_t == sum_t delta_t - residual_T exactly: the cumulative
+    bias is one single-step compression error, not O(T) of them."""
+    rng = np.random.default_rng(4)
+    ef = ErrorFeedback(make_codec(spec))
+    shape = (257,)
+    true_sum = np.zeros(shape, np.float32)
+    sent_sum = np.zeros(shape, np.float32)
+    for _ in range(30):
+        delta = jnp.asarray(rng.normal(size=shape) * 0.1, jnp.float32)
+        sent = ef.step({"w": delta})["w"]
+        true_sum += np.asarray(delta)
+        sent_sum += np.asarray(sent)
+    resid = np.asarray(ef.residual["w"])
+    # the whole cumulative bias is exactly the final residual — one
+    # (bounded) compression error, however many rounds ran
+    np.testing.assert_allclose(true_sum - sent_sum, resid, atol=1e-4)
+
+
+def test_error_feedback_beats_plain_topk_bias():
+    """Same constant update stream: with EF the accumulated master tracks
+    the true sum; without EF top-k never updates the dropped coords."""
+    rng = np.random.default_rng(5)
+    delta = jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32)
+    codec = make_codec("topk:0.25")
+    ef = ErrorFeedback(codec)
+    with_ef = np.zeros(64, np.float32)
+    without = np.zeros(64, np.float32)
+    for _ in range(16):
+        with_ef += np.asarray(ef.step({"w": delta})["w"])
+        without += np.asarray(codec.roundtrip({"w": delta})["w"])
+    true = 16 * np.asarray(delta)
+    assert _max_abs(with_ef - true) < 0.5 * _max_abs(without - true)
+
+
+def test_error_feedback_identity_codec_is_exact():
+    ef = ErrorFeedback(make_codec("none"))
+    d = {"w": jnp.arange(4, dtype=jnp.float32)}
+    out = ef.step(d)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(d["w"]))
+    assert ef.residual is None
+
+
+# ---------------------------------------------------------------------------
+# RunConfig validation (codecs + the numeric knobs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(uplink_codec="zip"), dict(downlink_codec="cast:f8"),
+    dict(participation=0.0), dict(participation=-0.2),
+    dict(participation=1.5), dict(population=1), dict(population=0),
+    dict(lr0=-0.1), dict(local_epochs=-1),
+])
+def test_run_config_rejected_at_config_time(kw):
+    with pytest.raises(ValueError):
+        RunConfig(**kw)
+
+
+def test_run_config_accepts_codecs():
+    cfg = RunConfig(uplink_codec="int8", downlink_codec="topk:0.5")
+    assert cfg.uplink_codec == "int8"
+    assert RunConfig(participation=1.0).participation == 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: per-codec backend parity + wire-byte accounting
+# ---------------------------------------------------------------------------
+
+def tiny_clients(num_clients=4, n=240, seed=0):
+    x, y = make_classification(seed, n, image=8, signal=1.5, noise=0.5)
+    return make_clients(x, y, partition_iid(seed, n, num_clients),
+                        batch=20, test_batch=20)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+def _run(api, clients, bk, up, down, gens=2):
+    eng = FedEngine(api, clients,
+                    RunConfig(population=4, generations=gens, seed=0,
+                              lr0=0.01, backend=bk, uplink_codec=up,
+                              downlink_codec=down))
+    return eng.run()
+
+
+@pytest.fixture(scope="module")
+def codec_parity(api):
+    clients = tiny_clients()
+    out = {}
+    for up, down in (("int8", "none"), ("topk:0.25", "cast")):
+        out[(up, down)] = {bk: _run(api, clients, bk, up, down)
+                           for bk in ("loop", "vmap", "mesh")}
+    return out
+
+
+@pytest.mark.parametrize("pair", [("int8", "none"), ("topk:0.25", "cast")])
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_codec_backend_parity(codec_parity, pair, bk):
+    """Same seed + codec: every backend reports byte-identical CommStats
+    (wire AND logical ledgers) and masters within 1e-5."""
+    ref, other = codec_parity[pair]["loop"], codec_parity[pair][bk]
+    assert dataclasses.asdict(ref.stats) == dataclasses.asdict(other.stats)
+    diff = max(float(jnp.abs(jnp.asarray(p) - jnp.asarray(q)).max())
+               for p, q in zip(jax.tree.leaves(ref.extras["final_master"]),
+                               jax.tree.leaves(other.extras["final_master"])))
+    assert diff <= 1e-5
+    for a, b in zip(ref.reports, other.reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+
+
+def test_int8_wire_reduction(api):
+    """int8 on both directions cuts down+up wire bytes >= 3.5x vs fp32
+    (keys and error counts stay uncompressed, so < 4.0x exactly)."""
+    clients = tiny_clients()
+    none = _run(api, clients, "vmap", "none", "none", gens=1).stats
+    int8 = _run(api, clients, "vmap", "int8", "int8", gens=1).stats
+    # logical ledger is codec-independent
+    assert none.down_bytes == int8.down_bytes
+    assert none.up_bytes == int8.up_bytes
+    ratio = ((none.down_wire_bytes + none.up_wire_bytes)
+             / (int8.down_wire_bytes + int8.up_wire_bytes))
+    assert ratio >= 3.5
+
+
+def test_wire_defaults_to_logical_without_codecs(api):
+    clients = tiny_clients()
+    stats = _run(api, clients, "loop", "none", "none", gens=1).stats
+    assert stats.down_wire_bytes == stats.down_bytes
+    assert stats.up_wire_bytes == stats.up_bytes
+
+
+def test_codec_run_is_reentrant(api):
+    """EF residuals reset per run(): two runs of one engine match."""
+    clients = tiny_clients()
+    eng = FedEngine(api, clients,
+                    RunConfig(population=4, generations=2, seed=0,
+                              lr0=0.01, backend="vmap",
+                              uplink_codec="topk:0.25"))
+    first, second = eng.run(), eng.run()
+    assert dataclasses.asdict(first.stats) == dataclasses.asdict(second.stats)
+    for p, q in zip(jax.tree.leaves(first.extras["final_master"]),
+                    jax.tree.leaves(second.extras["final_master"])):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_offline_strategy_with_codec(api):
+    """The codec wrapper covers the fedavg-population path too: the run
+    completes and the wire ledger shows the compression."""
+    from repro.engine import OfflineNas
+    clients = tiny_clients()
+    res = FedEngine(api, clients,
+                    RunConfig(population=2, generations=1, seed=1,
+                              lr0=0.01, backend="vmap",
+                              uplink_codec="int8"),
+                    strategy=OfflineNas()).run()
+    assert np.isfinite(res.reports[0].objs).all()
+    assert res.stats.up_wire_bytes < res.stats.up_bytes
+    assert res.stats.down_wire_bytes == res.stats.down_bytes

@@ -103,6 +103,37 @@ def test_expert_gemm_sweep(dtype, e, c, d, f):
                                rtol=TOL[dtype], atol=TOL[dtype] * 10)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("p", [1000, 8192, 100000])
+def test_quantize_int8_sweep(dtype, p):
+    """Pallas quantize/dequantize vs the jnp references: the int8 grids
+    must match exactly (same round/clip math), dequant to fp tolerance."""
+    x = rand((p,), dtype).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    q_k = ops.quantize_int8(x, scale)
+    q_r = ref.quantize_int8(x, scale)
+    assert q_k.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    d_k = ops.dequantize_int8(q_k, scale)
+    d_r = ref.dequantize_int8(q_r, scale)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=0, atol=0)
+    # roundtrip error bound: half a quantization step
+    np.testing.assert_array_less(np.abs(np.asarray(d_k) - np.asarray(x)),
+                                 float(scale) / 2 + 1e-7)
+
+
+def test_quantize_int8_zero_and_extremes():
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5, -0.49], jnp.float32)
+    scale = jnp.float32(1.0 / 127.0)
+    q = np.asarray(ops.quantize_int8(x, scale))
+    np.testing.assert_array_equal(q, [0, 127, -127, 64, -62])
+    # values beyond the grid clip instead of wrapping
+    big = jnp.asarray([10.0, -10.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.quantize_int8(big, scale)),
+                                  [127, -127])
+
+
 def test_expert_ffn_kernel_matches_moe_module():
     from repro.models.moe import expert_ffn as moe_ffn
     e, c, d, f = 2, 128, 128, 256
