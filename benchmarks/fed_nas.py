@@ -12,14 +12,20 @@ population sharded over a jax device mesh).  Run
 
     PYTHONPATH=src python benchmarks/fed_nas.py
 
-to compare the three backends on the default cross-device config (many
-small clients — the axis the loop backend's O(population x clients)
-dispatch count scales with) AND the payload codecs (``--mode codecs``:
-per-codec wire bytes, compression ratio vs fp32, and the int8+error-
-feedback vs fp32 search trajectory; ``--out`` writes the JSON that
-``benchmarks/results/`` tracks).  As a script it forces an 8-way host
-device mesh (``--xla_force_host_platform_device_count=8``) so the mesh
-backend has devices to shard over; equivalently set XLA_FLAGS yourself.
+to compare the backend variants — loop, vmap and mesh, each of the
+batched pair with the fused-generation path on AND off — on the default
+cross-device config (many small clients — the regime where dispatch
+count, not compute, is the bottleneck) AND the payload codecs
+(``--mode codecs``: per-codec wire bytes, compression ratio vs fp32,
+and the int8+error-feedback vs fp32 search trajectory; ``--out`` writes
+the JSON that ``benchmarks/results/`` tracks).  ``--mode backends``
+writes ``BENCH_engine.json`` (dispatches/gen, wall-clock/gen, peak live
+bytes per variant, the fused speedups and the scalar-vs-batched-key
+measurement) — the repo root keeps the CI-host point of that perf
+trajectory and CI uploads it as an artifact.  As a script it forces an
+8-way host device mesh (``--xla_force_host_platform_device_count=8``)
+so the mesh backend has devices to shard over; equivalently set
+XLA_FLAGS yourself.
 """
 from __future__ import annotations
 
@@ -108,43 +114,93 @@ def _max_err_diff(a, b) -> float:
         for x, y in zip(a.reports, b.reports)))
 
 
-def compare_backends(api=None, clients=None, generations: int = 3,
-                     population: int = 6, seed: int = 0,
-                     backends=("loop", "vmap", "mesh")) -> Dict:
-    """Same search on every execution backend: wall clock, dispatch
-    counts, and result agreement (vs the loop reference, plus the
-    mesh-vs-vmap pair the sharded path is certified against).  The
-    default client set is the cross-device regime (256 small clients)
-    where the loop backend's O(population x clients) dispatch count is
-    the bottleneck."""
+def _live_bytes() -> int:
+    """Bytes currently held by live jax arrays — sampled per round, the
+    max is the 'peak live bytes' BENCH_engine.json records (device
+    memory_stats are unavailable on the CPU wheel)."""
+    return int(sum(a.nbytes for a in jax.live_arrays()))
+
+
+def _variant(name: str):
+    """'vmap' -> ('vmap', fused=True); 'vmap-nofused' -> ('vmap', False).
+    The loop backend has no fused path (the flag is ignored there)."""
+    base, _, suffix = name.partition("-")
+    return base, suffix != "nofused"
+
+
+BACKEND_VARIANTS = ("loop", "vmap", "vmap-nofused", "mesh", "mesh-nofused")
+
+
+def compare_backends(api=None, clients=None, generations: int = 5,
+                     population: int = 10, seed: int = 0,
+                     backends=BACKEND_VARIANTS) -> Dict:
+    """Same search on every execution-backend variant (``'vmap'`` =
+    fused, ``'vmap-nofused'`` = per-bucket dispatches, etc.): wall clock
+    (total and steady-state per generation, from ``RoundReport.round_s``),
+    dispatch counts, peak live bytes, and result agreement (vs the first
+    variant, plus the fused-vs-nonfused and mesh-vs-vmap pairs the fused
+    path is certified against).  The default client set is the
+    paper-scale cross-device regime — population 10 over 16 clients with
+    minibatch-sized local shards, one local pass per round — where
+    dispatch overhead, not compute, bounds the generation wall clock
+    (larger per-client workloads converge to hardware-limited, where
+    fused ~= non-fused by construction; pass ``clients`` to measure that
+    end)."""
     import dataclasses
 
     api = api or build_api()
     if clients is None:
-        clients = build_clients(256, iid=True, n=2560, batch=5,
-                                test_batch=5, image=8)
+        clients = build_clients(16, iid=True, n=64, batch=2,
+                                test_batch=2, image=8)
     out: Dict = {"generations": generations, "population": population,
                  "clients": len(clients), "devices": len(jax.devices()),
                  "backends": list(backends)}
     hists = {}
-    for bk in backends:
+    for name in backends:
+        base, fused = _variant(name)
         eng = FedEngine(api, clients,
                         RunConfig(population=population,
                                   generations=generations, seed=seed,
-                                  backend=bk))
+                                  backend=base, fused=fused))
+        # peak is measured as growth over the pre-run baseline, so
+        # arrays retained by earlier variants (their final masters in
+        # `hists`) don't bias later variants' numbers
+        baseline = _live_bytes()
+        peak = 0
+
+        def sample_peak(gen, report):
+            nonlocal peak
+            peak = max(peak, _live_bytes() - baseline)
+
         t0 = time.time()
-        res = eng.run()
+        res = eng.run(callback=sample_peak)
         wall = time.time() - t0
-        walls = [r.wall_s for r in res.reports]
-        steady = (walls[-1] - walls[-2]) if len(walls) > 1 else walls[-1]
-        hists[bk] = res
-        out[bk] = {"wall_s": wall, "steady_gen_s": steady,
-                   "dispatches": eng.backend.dispatches,
-                   "dispatches_per_gen": eng.backend.dispatches / generations}
+        rounds = [r.round_s for r in res.reports]
+        steady = (sum(rounds[1:]) / (len(rounds) - 1) if len(rounds) > 1
+                  else rounds[0])     # gen 1 pays compile; exclude it
+        hists[name] = res
+        out[name] = {"backend": base, "fused": fused,
+                     "wall_s": wall, "steady_gen_s": steady,
+                     "round_s": [round(r, 4) for r in rounds],
+                     "peak_live_bytes": peak,
+                     "dispatches": eng.backend.dispatches,
+                     "dispatches_per_gen": eng.backend.dispatches / generations}
     ref = hists[backends[0]]
-    for bk in backends[1:]:
-        out[bk]["max_err_diff"] = _max_err_diff(ref, hists[bk])
-        out[bk]["max_param_diff"] = _max_param_diff(ref, hists[bk])
+    for name in backends[1:]:
+        out[name]["max_err_diff"] = _max_err_diff(ref, hists[name])
+        out[name]["max_param_diff"] = _max_param_diff(ref, hists[name])
+    for base in ("vmap", "mesh"):      # the acceptance pair: fused wins
+        f, nf = base, f"{base}-nofused"
+        if f in hists and nf in hists:
+            out[f"{base}_fused_vs_nonfused"] = {
+                "steady_speedup": (out[nf]["steady_gen_s"]
+                                   / out[f]["steady_gen_s"]),
+                "total_speedup": out[nf]["wall_s"] / out[f]["wall_s"],
+                "max_err_diff": _max_err_diff(hists[nf], hists[f]),
+                "max_param_diff": _max_param_diff(hists[nf], hists[f]),
+                "comm_stats_equal": dataclasses.asdict(hists[nf].stats)
+                == dataclasses.asdict(hists[f].stats),
+            }
     if "vmap" in hists and "mesh" in hists:
         out["mesh_vs_vmap"] = {
             "comm_stats_equal": dataclasses.asdict(hists["mesh"].stats)
@@ -159,6 +215,76 @@ def compare_backends(api=None, clients=None, generations: int = 3,
         out["max_err_diff"] = out["vmap"]["max_err_diff"]
         out["max_param_diff"] = out["vmap"]["max_param_diff"]
     return out
+
+
+def measure_key_batching(api=None, clients=None, n_keys: int = 12,
+                         repeats: int = 3, seed: int = 0) -> Dict:
+    """Re-measure the "batched keys lower ``lax.switch`` to
+    compute-all-branches-and-select" trade, separately for training and
+    forward-only evaluation, now that fused execution makes dispatch
+    count equal (one program either way): scalar-key ``lax.scan`` vs
+    batched-key ``vmap`` over the same stacked shards.  The winner per
+    phase is the documented default — see docs/architecture.md "Fused
+    generations"."""
+    from repro.core.federated import client_update_fn, eval_count_fn
+
+    api = api or build_api()
+    if clients is None:
+        clients = build_clients(8, iid=True, n=480, batch=20, test_batch=20)
+    rng = np.random.default_rng(seed)
+    keys = jax.numpy.asarray(
+        rng.integers(0, 4, size=(n_keys, api.num_blocks)), np.int32)
+    params = api.init(jax.random.PRNGKey(seed))
+    ev = eval_count_fn(api)
+    upd = client_update_fn(api, 1, 0.5)
+    import jax.numpy as jnp
+    exb = jnp.stack([jnp.asarray(c.test[0]) for c in clients])
+    eyb = jnp.stack([jnp.asarray(c.test[1]) for c in clients])
+    txb = jnp.stack([jnp.asarray(c.train[0]) for c in clients])
+    tyb = jnp.stack([jnp.asarray(c.train[1]) for c in clients])
+
+    def eval_one(p, key):
+        def per_client(a, c):
+            return a + ev(p, key, c[0], c[1]), None
+        return jax.lax.scan(per_client, jnp.zeros((), jnp.int32),
+                            (exb, eyb))[0]
+
+    def train_one(p, key):
+        def per_client(_, c):
+            return None, upd(p, key, c[0], c[1], 0.05)
+        return jax.lax.scan(per_client, None, (txb, tyb))[1]
+
+    variants = {
+        "eval": {
+            "scalar_key_scan": jax.jit(lambda p, ks: jax.lax.scan(
+                lambda _, k: (None, eval_one(p, k)), None, ks)[1]),
+            "batched_key_vmap": jax.jit(lambda p, ks: jax.vmap(
+                lambda k: eval_one(p, k))(ks)),
+        },
+        "train": {
+            "scalar_key_scan": jax.jit(lambda p, ks: jax.lax.scan(
+                lambda _, k: (None, train_one(p, k)), None, ks)[1]),
+            "batched_key_vmap": jax.jit(lambda p, ks: jax.vmap(
+                lambda k: train_one(p, k))(ks)),
+        },
+    }
+
+    def bench(fn):
+        jax.block_until_ready(fn(params, keys))      # compile
+        t0 = time.time()
+        for _ in range(repeats):
+            jax.block_until_ready(fn(params, keys))
+        return (time.time() - t0) / repeats
+
+    rep: Dict = {"n_keys": n_keys, "clients": len(clients)}
+    for phase, fns in variants.items():
+        s = bench(fns["scalar_key_scan"])
+        v = bench(fns["batched_key_vmap"])
+        rep[phase] = {"scalar_key_scan_s": s, "batched_key_vmap_s": v,
+                      "vmap_over_scan": v / s,
+                      "winner": ("scalar_key_scan" if s <= v
+                                 else "batched_key_vmap")}
+    return rep
 
 
 def compare_codecs(api=None, clients=None, generations: int = 3,
@@ -276,9 +402,15 @@ def _run_backend_mode(args) -> Dict:
     clients = build_clients(args.clients, iid=True, n=args.samples,
                             batch=args.batch, test_batch=args.batch,
                             image=args.image)
-    rep = compare_backends(build_api(), clients,
-                           generations=args.generations,
-                           population=args.population, seed=args.seed,
+    api = build_api()
+    population = 10 if args.population is None else args.population
+    # 25 generations by default: steady-state is ~30 ms/gen at the
+    # dispatch-bound point, so short runs read timer noise — and the
+    # recorded repo-root BENCH_engine.json must stay comparable run to
+    # run (CI uses the same default)
+    gens = 25 if args.generations is None else args.generations
+    rep = compare_backends(api, clients, generations=gens,
+                           population=population, seed=args.seed,
                            backends=tuple(args.backends))
     print(f"{rep['clients']} clients x {rep['generations']} generations, "
           f"population {rep['population']}, {rep['devices']} devices")
@@ -288,26 +420,51 @@ def _run_backend_mode(args) -> Dict:
         agree = (f" | vs {ref}: err {r['max_err_diff']:.1e} "
                  f"params {r['max_param_diff']:.1e}"
                  if "max_err_diff" in r else "")
-        print(f"{bk:>5}: total {r['wall_s']:7.1f}s | steady "
+        print(f"{bk:>13}: total {r['wall_s']:7.1f}s | steady "
               f"{r['steady_gen_s']:6.2f}s/gen | "
-              f"{r['dispatches_per_gen']:7.1f} dispatches/gen{agree}")
+              f"{r['dispatches_per_gen']:7.1f} dispatches/gen | "
+              f"{r['peak_live_bytes'] / 1e6:7.1f} MB live{agree}")
     if "speedup_total" in rep:
-        print(f"vmap speedup: {rep['speedup_total']:.2f}x total, "
+        print(f"vmap speedup vs loop: {rep['speedup_total']:.2f}x total, "
               f"{rep['speedup_steady']:.2f}x steady-state")
+    for base in ("vmap", "mesh"):
+        key = f"{base}_fused_vs_nonfused"
+        if key in rep:
+            fv = rep[key]
+            print(f"{base} fused vs non-fused: "
+                  f"{fv['steady_speedup']:.2f}x steady | err diff "
+                  f"{fv['max_err_diff']:.1e} | param diff "
+                  f"{fv['max_param_diff']:.1e} | CommStats equal: "
+                  f"{fv['comm_stats_equal']}")
     if "mesh_vs_vmap" in rep:
         mv = rep["mesh_vs_vmap"]
         print(f"mesh vs vmap: CommStats equal: {mv['comm_stats_equal']} | "
               f"max err diff {mv['max_err_diff']:.2e} | "
               f"max master-param diff {mv['max_param_diff']:.2e}")
+    if args.key_batching:
+        kb = measure_key_batching(api)
+        rep["key_batching"] = kb
+        for phase in ("train", "eval"):
+            r = kb[phase]
+            print(f"key batching [{phase}]: scalar-key scan "
+                  f"{r['scalar_key_scan_s']:.3f}s vs batched-key vmap "
+                  f"{r['batched_key_vmap_s']:.3f}s "
+                  f"({r['vmap_over_scan']:.2f}x) -> {r['winner']}")
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(f"wrote {args.bench_out}")
     return rep
 
 
 def _run_codec_mode(args) -> Dict:
     api = build_api()
+    population = 6 if args.population is None else args.population
+    gens = 3 if args.generations is None else args.generations
     clients = build_clients(args.codec_clients, iid=True,
                             n=args.codec_samples, batch=20, test_batch=20)
-    rep = compare_codecs(api, clients, generations=args.generations,
-                         population=args.population, seed=args.seed,
+    rep = compare_codecs(api, clients, generations=gens,
+                         population=population, seed=args.seed,
                          codecs=tuple(args.codecs))
     print(f"\ncodecs ({rep['clients']} clients x {rep['generations']} "
           f"generations, population {rep['population']}, "
@@ -321,7 +478,7 @@ def _run_codec_mode(args) -> Dict:
     if args.trajectory_generations > 0:
         traj = codec_trajectory(api, clients,
                                 generations=args.trajectory_generations,
-                                population=args.population, seed=args.seed)
+                                population=population, seed=args.seed)
         rep["trajectory"] = traj
         print(f"{traj['codec']}+EF vs fp32 over "
               f"{traj['generations']} generations: final err "
@@ -337,16 +494,23 @@ def main():
         description="execution-backend and payload-codec comparisons")
     ap.add_argument("--mode", choices=["backends", "codecs", "both"],
                     default="both")
-    ap.add_argument("--generations", type=int, default=3)
-    ap.add_argument("--population", type=int, default=6)
-    ap.add_argument("--clients", type=int, default=256,
-                    help="backends mode: client count (the codec mode "
-                         "has its own --codec-* sizing)")
-    ap.add_argument("--samples", type=int, default=2560,
+    ap.add_argument("--generations", type=int, default=None,
+                    help="defaults to 25 in backends mode (steady-state "
+                         "per-gen times are ~30 ms — shorter runs read "
+                         "timer noise) and 3 in codecs mode")
+    ap.add_argument("--population", type=int, default=None,
+                    help="defaults to 10 in backends mode (the recorded "
+                         "perf point) and 6 in codecs mode")
+    ap.add_argument("--clients", type=int, default=16,
+                    help="backends mode: client count — default is the "
+                         "paper-scale dispatch-bound point BENCH_engine"
+                         ".json records (the codec mode has its own "
+                         "--codec-* sizing)")
+    ap.add_argument("--samples", type=int, default=64,
                     help="backends mode: total samples")
     ap.add_argument("--image", type=int, default=8,
                     help="backends mode: image size")
-    ap.add_argument("--batch", type=int, default=5,
+    ap.add_argument("--batch", type=int, default=2,
                     help="backends mode: per-client batch size")
     ap.add_argument("--codec-clients", type=int, default=8,
                     help="codecs mode: client count")
@@ -354,8 +518,14 @@ def main():
                     help="codecs mode: total samples")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backends", nargs="+",
-                    default=["loop", "vmap", "mesh"],
-                    choices=["loop", "vmap", "mesh"])
+                    default=list(BACKEND_VARIANTS),
+                    choices=list(BACKEND_VARIANTS))
+    ap.add_argument("--bench-out", default="BENCH_engine.json",
+                    help="backends mode: write the perf-trajectory JSON "
+                         "here (repo root by convention; '' disables)")
+    ap.add_argument("--key-batching", type=int, default=1,
+                    help="backends mode: re-measure scalar-key scan vs "
+                         "batched-key vmap per phase (0 disables)")
     ap.add_argument("--codecs", nargs="+",
                     default=["none", "cast", "int8", "topk"])
     ap.add_argument("--trajectory-generations", type=int, default=30,

@@ -18,7 +18,7 @@ version of the flat inner loop (this module is its oracle).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -142,7 +142,8 @@ def _combine_jit(prev_master, clients, masks, weights):
 def fill_aggregate_stacked(prev_master: Params,
                            chunks: Sequence[Tuple[Params, Any, np.ndarray]],
                            mask_fn: Callable,
-                           backend: str = "xla") -> Params:
+                           backend: str = "xla",
+                           total: Optional[float] = None) -> Params:
     """Batched Algorithm 3 for the vmap/mesh execution backends.
 
     ``chunks`` holds stacked uploads: each entry is ``(stacked_params,
@@ -157,9 +158,13 @@ def fill_aggregate_stacked(prev_master: Params,
     parameter vector (the same route ``fill_aggregate`` takes); off-TPU
     the kernel body executes in interpret mode (``kernels.ops.INTERPRET``)
     so the selection is valid everywhere.  Weight normalization is global
-    across chunks, so per-chunk partial sums compose exactly.
+    across chunks, so per-chunk partial sums compose exactly; callers
+    whose chunk weights are ALREADY normalized pass ``total=1.0`` (the
+    fused/mesh routes) — re-deriving it from the float sum would shift
+    every weight by ~1 ulp, and that amplifies over generations of SGD.
     """
-    total = float(sum(float(np.sum(w)) for _, _, w in chunks))
+    if total is None:
+        total = float(sum(float(np.sum(w)) for _, _, w in chunks))
     if backend == "pallas":
         return _fill_stacked_pallas(prev_master, chunks, mask_fn, total)
     acc = None
@@ -183,11 +188,14 @@ def _fill_stacked_pallas(prev_master: Params, chunks, mask_fn: Callable,
     leaves_prev, treedef = jax.tree.flatten(prev_master)
     flat_prev = _flat_f32(leaves_prev)
     flat = None
-    for stacked, keys, w in chunks:
+    for i, (stacked, keys, w) in enumerate(chunks):
         wnorm = jnp.asarray(np.asarray(w, np.float32) / total)
         cl, mk = _flatten_chunk(stacked, jnp.asarray(keys, jnp.int32),
                                 mask_fn=mask_fn)
-        part = kops.fill_aggregate(cl, mk, wnorm, flat_prev)
+        # flat_prev is dead after the last chunk, so its buffer can be
+        # aliased into that call's output (kernel-level donation)
+        part = kops.fill_aggregate(cl, mk, wnorm, flat_prev,
+                                   donate_prev=(i == len(chunks) - 1))
         flat = part if flat is None else flat + part
     return _unflatten_like(flat, leaves_prev, treedef)
 
@@ -210,9 +218,19 @@ def _flatten_chunk(stacked, keys, mask_fn):
     return cl, mk
 
 
-@functools.partial(jax.jit, static_argnames=("mask_fn",))
-def _fill_stacked_partial(prev_master, stacked, keys, wnorm, mask_fn):
-    masks = jax.vmap(mask_fn)(stacked, keys)
+def fill_partial(prev_master: Params, stacked: Params, masks: Params,
+                 wnorm) -> Params:
+    """The Algorithm 3 partial sum over one stack of uploads: per leaf,
+    ``sum_k w_k * (mask_k * client_k + (1 - mask_k) * prev)`` in float32,
+    where every ``stacked``/``masks`` leaf carries a leading (P,) upload
+    axis and ``wnorm`` is the (P,) globally-normalized weight vector
+    (0-weight rows — padding — contribute exactly nothing).
+
+    This is THE reduction expression of the batched fill paths: the
+    stacked aggregator below, the mesh backend's shard_map body and the
+    fused-generation programs all call it, so their float32 reduction
+    order matches expression for expression — the backend-parity
+    guarantees rest on that."""
 
     def combine(prev, cp, m):
         m = m.astype(jnp.float32)
@@ -223,6 +241,12 @@ def _fill_stacked_partial(prev_master, stacked, keys, wnorm, mask_fn):
         return jnp.sum(w * filled, axis=0)
 
     return jax.tree.map(combine, prev_master, stacked, masks)
+
+
+@functools.partial(jax.jit, static_argnames=("mask_fn",))
+def _fill_stacked_partial(prev_master, stacked, keys, wnorm, mask_fn):
+    masks = jax.vmap(mask_fn)(stacked, keys)
+    return fill_partial(prev_master, stacked, masks, wnorm)
 
 
 def fedavg(uploads: Sequence[Tuple[Params, float]]) -> Params:

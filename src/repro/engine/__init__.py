@@ -5,10 +5,11 @@
 Strategies: RealTimeNas (Algorithm 4), OfflineNas (Zhu & Jin 2019
 baseline), FedAvgBaseline (Algorithm 1, fixed architecture).
 Backends: "loop" (reference, one dispatch per (individual, client)
-pair), "vmap" (ClientBatch-stacked, O(population) dispatches per
-generation — constant in the number of clients) and "mesh" (population
-axis sharded over a jax device mesh, O(population / devices)
-dispatches).  Payload codecs (``RunConfig.uplink_codec`` /
+pair), "vmap" (ClientBatch-stacked) and "mesh" (population axis sharded
+over a jax device mesh); with ``RunConfig.fused`` — the default — the
+batched backends run each generation as O(1) jitted dispatches (one
+fill-train program with a donated master, one evaluation program
+fetched by a single device_get).  Payload codecs (``RunConfig.uplink_codec`` /
 ``downlink_codec`` -> ``repro.comm``) compress what crosses the wire
 around any strategy x backend pair.  See docs/architecture.md for the
 full matrix, the round lifecycle and the codec semantics.

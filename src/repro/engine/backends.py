@@ -19,9 +19,24 @@ and runs all population x client updates — and all 2N x participants
 evaluations — in O(population) jitted dispatches per generation,
 constant in the number of participating clients.  ``MeshBackend``
 (``repro.engine.mesh_backend``) additionally shards the population axis
-of those stacks over a jax device mesh, for O(population / devices)
-dispatches per generation.  All backends count ``dispatches`` so tests
-and benchmarks can assert those claims instead of trusting them.
+of those stacks over a jax device mesh.  All backends count
+``dispatches`` so tests and benchmarks can assert those claims instead
+of trusting them.
+
+With ``RunConfig.fused`` (the default) the batched backends collapse
+further, to a *constant* number of dispatches per generation: the whole
+population's choice keys are stacked into one (P, num_blocks) device
+array and a single jitted program per ``train_fill`` runs the local-SGD
+scan, the per-group weighting and the Algorithm 3 partial sums for
+every individual (master passed with ``donate_argnums`` off-CPU so the
+per-generation master update reuses its buffers — see
+``master_donation_safe``), while a single evaluation program takes the
+master plus all stacked keys and returns the on-device wrong-count
+vector, fetched with one ``jax.device_get`` per generation instead of
+2N x buckets blocking ``int(...)`` syncs.  The shared program bodies
+(``fill_bucket_partial``, ``eval_bucket_counts``, ...) live here;
+``MeshBackend`` composes the same bodies with its ``shard_map``/``psum``
+structure, so the fused sharded path is O(1) dispatches per generation.
 
 Every backend routes Algorithm 3 through ``RunConfig.aggregate_backend``
 identically: ``"xla"`` is the jnp reference, ``"pallas"`` the
@@ -38,6 +53,7 @@ compressed inputs.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, List, Protocol, Sequence
 
 import jax
@@ -45,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import fedavg, fill_aggregate, \
-    fill_aggregate_stacked
+    fill_aggregate_stacked, fill_partial
 from repro.core.federated import client_update_fn, eval_count_fn, \
     make_client_update, make_evaluator, weighted_test_error
 from repro.core.supernet import SupernetAPI
@@ -53,6 +69,170 @@ from repro.data.pipeline import ClientBatch, ClientDataset, shape_buckets
 from repro.engine.types import RunConfig
 
 Params = Any
+
+
+def master_donation_safe(cfg: RunConfig) -> bool:
+    """Whether a fused ``train_fill`` may pass the master pytree with
+    ``donate_argnums`` (reusing its buffers for the updated master).
+
+    Donation invalidates the caller's master after the dispatch.  Every
+    strategy overwrites its master with ``train_fill``'s return value,
+    so the only reader of the *old* buffers is ``CodecBackend``: with a
+    lossy uplink codec it re-reads the downlinked master to form the
+    uplink delta (``raw - sent_down``) after the inner call.  Hence:
+    donation is safe iff the uplink codec is the identity.  (The jit
+    donation itself is additionally gated on a non-CPU jax backend at
+    construction time — CPU XLA cannot reuse donated buffers and would
+    warn on every dispatch.)"""
+    from repro.comm import make_codec
+    return make_codec(cfg.uplink_codec).is_identity
+
+
+# ---------------------------------------------------------------------------
+# Fused-generation program bodies (shared by VmapBackend and MeshBackend)
+# ---------------------------------------------------------------------------
+#
+# Each body consumes ONE shape bucket of group-major stacked arrays (see
+# StackedClientBase._group_bucket_arrays) and keeps every choice key a
+# traced *scalar* via lax.scan, so lax.switch in the model forward stays
+# a real branch (vmapping the key axis would lower to compute-all-
+# branches-and-select; benchmarks/fed_nas.py re-measures that trade per
+# phase — see docs/architecture.md "Fused generations").  MeshBackend
+# wraps the same bodies in shard_map (+ psum for train), which is what
+# keeps the loop/vmap/mesh float32 reduction orders aligned.
+
+def fill_bucket_partial(upd, mask_fn, master, keys, xb, yb, w, lr):
+    """Fused local SGD + Algorithm 3 partial sum over one shape bucket.
+
+    ``keys`` (G, num_blocks) int32; ``xb``/``yb`` (G, S, nbat, B, ...);
+    ``w`` (G, S) float32 globally normalized (0 = padding).  Scans over
+    the G groups; per group, scans local SGD over the S clients and
+    reduces with ``aggregate.fill_partial`` — the same expression the
+    non-fused stacked aggregator uses.  Returns the float32 partial-sum
+    tree (callers add buckets and cast back to the master dtypes)."""
+
+    def per_group(acc, inp):
+        key, gx, gy, gw = inp
+
+        def per_client(_, c):
+            return None, upd(master, key, c[0], c[1], lr)
+
+        outs = jax.lax.scan(per_client, None, (gx, gy))[1]
+        keys_s = jnp.broadcast_to(key, (gw.shape[0],) + key.shape)
+        masks = jax.vmap(mask_fn)(outs, keys_s)
+        part = fill_partial(master, outs, masks, gw)
+        return jax.tree.map(jnp.add, acc, part), None
+
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), master)
+    return jax.lax.scan(per_group, zeros, (keys, xb, yb, w))[0]
+
+
+def train_bucket_uploads(upd, master, keys, xb, yb, lr):
+    """Fused local SGD over one bucket, uploads returned stacked
+    (G, S, ...) — the ``aggregate_backend='pallas'`` route, where
+    Algorithm 3 runs in the ``repro.kernels.fill_aggregate`` kernel
+    outside this program."""
+
+    def per_group(_, inp):
+        key, gx, gy = inp
+
+        def per_client(__, c):
+            return None, upd(master, key, c[0], c[1], lr)
+
+        return None, jax.lax.scan(per_client, None, (gx, gy))[1]
+
+    return jax.lax.scan(per_group, None, (keys, xb, yb))[1]
+
+
+def _tiled_count(ev, params, key, xb, yb, tile):
+    """Wrong count of one (params, key) pair over a stacked test bucket,
+    with the client axis consumed ``tile`` shards per scan step through
+    an inner ``vmap`` (forward-only compute is cheap enough for moderate
+    batching to pay — the same trade ``RunConfig.vmap_eval_tile`` makes
+    on the non-fused path).  Counts are integers, so any tiling yields
+    bitwise-identical totals."""
+    m = xb.shape[0]
+    tile = max(1, min(tile, m))
+    full = (m // tile) * tile
+    tile_ev = jax.vmap(ev, in_axes=(None, None, 0, 0))
+    acc = jnp.zeros((), jnp.int32)
+    if full:
+        fx = xb[:full].reshape((full // tile, tile) + xb.shape[1:])
+        fy = yb[:full].reshape((full // tile, tile) + yb.shape[1:])
+
+        def tiles(a, c):
+            return a + jnp.sum(tile_ev(params, key, c[0], c[1])), None
+
+        acc = jax.lax.scan(tiles, acc, (fx, fy))[0]
+    if m > full:
+        def tail(a, c):
+            return a + ev(params, key, c[0], c[1]), None
+
+        acc = jax.lax.scan(tail, acc, (xb[full:], yb[full:]))[0]
+    return acc
+
+
+def eval_bucket_counts(ev, params, keys, xb, yb, tile=1):
+    """Wrong counts of every key on one shared master over one stacked
+    test bucket: ``keys`` (K, num_blocks) -> (K,) int32 on device.  The
+    key axis is consumed by ``lax.scan`` (scalar keys keep ``lax.switch``
+    a real branch); the client axis is tiled (``_tiled_count``)."""
+
+    def per_key(_, key):
+        return None, _tiled_count(ev, params, key, xb, yb, tile)
+
+    return jax.lax.scan(per_key, None, keys)[1]
+
+
+def eval_paired_bucket_counts(ev, ps, keys, xb, yb, tile=1):
+    """``eval_bucket_counts`` for (params, key) pairs: every ``ps`` leaf
+    carries a leading (K,) axis aligned with ``keys``."""
+
+    def per_pair(_, inp):
+        p, key = inp
+        return None, _tiled_count(ev, p, key, xb, yb, tile)
+
+    return jax.lax.scan(per_pair, None, (ps, keys))[1]
+
+
+def fedavg_population_bucket(upd, ps, keys, xb, yb, wn, lr):
+    """Per-individual FedAvg partial sums over one train bucket: ``ps``
+    leaves (P, ...), ``keys`` (P, nb); ``xb``/``yb`` (S, nbat, B, ...)
+    and ``wn`` (S,) normalized weights shared by every individual.
+    Mirrors the non-fused ``scan_update_avg`` (stacked outs, one
+    weighted ``jnp.sum``) so reduction order matches across paths."""
+
+    def per_ind(_, inp):
+        p, key = inp
+
+        def per_client(__, c):
+            return None, upd(p, key, c[0], c[1], lr)
+
+        outs = jax.lax.scan(per_client, None, (xb, yb))[1]
+
+        def avg(x):
+            wr = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.sum(wr * x.astype(jnp.float32), axis=0)
+
+        return None, jax.tree.map(avg, outs)
+
+    return jax.lax.scan(per_ind, None, (ps, keys))[1]
+
+
+def accumulate_parts(parts):
+    """Sum an iterable of identically-shaped pytrees (a bare array is a
+    one-leaf pytree) — the bucket combiner of every fused program."""
+    acc = None
+    for part in parts:
+        acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+    return acc
+
+
+def cast_like(tree, ref):
+    """Cast every leaf of the float32 accumulator back to ``ref``'s
+    dtypes (the fused programs' final step — with a donated master, the
+    output reuses ``ref``'s buffers)."""
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), tree, ref)
 
 
 class ExecutionBackend(Protocol):
@@ -72,7 +252,10 @@ class ExecutionBackend(Protocol):
     def train_fill(self, master: Params, keys: Sequence[np.ndarray],
                    groups: Sequence[np.ndarray], lr: float) -> Params:
         """Train keys[g] on client group g from the shared master and
-        fill-aggregate the uploads into the new master (Algorithm 3/4)."""
+        fill-aggregate the uploads into the new master (Algorithm 3/4).
+        Callers must treat ``master`` as consumed — fused backends may
+        donate its buffers to the returned update
+        (``master_donation_safe``)."""
         ...
 
     def train_fedavg(self, params: Params, key: np.ndarray,
@@ -238,17 +421,78 @@ class StackedClientBase:
     def _test_batches(self, client_ids):
         """Memoized test-shard stacks: shards are immutable, and the
         pooled wrong/total error is order-invariant, so the ids can be
-        canonicalized (sorted) and the host-side np.stack done once per
-        participant set instead of once per key per generation.  Size-2
-        (current + previous set): full participation hits every round,
-        while partial participation — a fresh set each round — never
-        pins more than two stacked copies of the test data."""
+        canonicalized (sorted) and the stack built — and placed on
+        device — once per participant set instead of once per key per
+        generation.  Size-2 LRU (hits refresh recency): full
+        participation hits every round, alternating participant sets
+        keep both entries live, and partial participation — a fresh set
+        each round — never pins more than two stacked copies of the
+        test data."""
         key = tuple(sorted(int(i) for i in client_ids))
-        if key not in self._test_cache:
-            if len(self._test_cache) >= 2:
-                self._test_cache.pop(next(iter(self._test_cache)))
-            self._test_cache[key] = list(self._group_batches(key, "test"))
-        return self._test_cache[key]
+        cache = self._test_cache
+        if key in cache:
+            cache[key] = cache.pop(key)      # refresh recency (true LRU)
+        else:
+            if len(cache) >= 2:
+                cache.pop(next(iter(cache)))  # evict least-recently-used
+            cache[key] = [
+                dataclasses.replace(cb, xb=self._place_test(cb.xb),
+                                    yb=self._place_test(cb.yb))
+                for cb in self._group_batches(key, "test")]
+        return cache[key]
+
+    def _place_test(self, arr):
+        """Device placement for the cached test stacks; ``MeshBackend``
+        overrides with an explicitly mesh-replicated put so the stack is
+        transferred once per participant set, not once per dispatch."""
+        return jnp.asarray(arr)
+
+    @staticmethod
+    def _rates(counts, batches, n_keys):
+        """One ``jax.device_get`` per generation: the on-device
+        wrong-count vector -> pooled error rates of the first ``n_keys``
+        keys (the rest is mesh padding)."""
+        total = sum(cb.num_shards * cb.samples_per_shard for cb in batches)
+        wrong = np.asarray(jax.device_get(counts), np.int64)
+        return wrong[:n_keys] / max(total, 1)
+
+    def _group_bucket_arrays(self, keys, groups, total, pad_groups=0,
+                             place=jnp.asarray):
+        """Per shape bucket of the resident train store, the group-major
+        stacked arrays the fused / sharded fill programs consume:
+        (keys (Gp, nb) int32, xb (Gp, S, nbat, B, ...), yb, w (Gp, S)
+        float32 normalized by ``total``), with the G groups padded to
+        Gp = G + ``pad_groups`` and ragged groups padded to S clients —
+        all padding at weight 0, so it contributes exactly nothing.
+        ``place`` puts each array on device (the mesh backend shards the
+        leading axis here); the keys array is placed once and shared by
+        every bucket."""
+        out = []
+        g_n = len(groups)
+        keys_arr = np.zeros((g_n + pad_groups, self.api.num_blocks),
+                            np.int32)
+        keys_arr[:g_n] = np.stack([np.asarray(k, np.int32) for k in keys])
+        karr = place(keys_arr)       # one transfer, shared by buckets
+        for pos, xb_all, yb_all in self._train_store():
+            entries = [[(pos[int(c)], self.clients[int(c)].weight)
+                        for c in g if int(c) in pos] for g in groups]
+            s_max = max((len(e) for e in entries), default=0)
+            if s_max == 0:
+                continue
+            rows = np.zeros((g_n + pad_groups, s_max), np.int32)
+            w = np.zeros((g_n + pad_groups, s_max), np.float32)
+            for g, e in enumerate(entries):
+                if not e:
+                    continue
+                rows[g, :len(e)] = [row for row, _ in e]
+                # normalize exactly as fill_aggregate_stacked does (f32
+                # weight vector / f64 total) — a 1-ulp difference here
+                # amplifies over generations of SGD
+                w[g, :len(e)] = np.asarray([wt for _, wt in e],
+                                           np.float32) / total
+            out.append((karr, place(xb_all[rows]), place(yb_all[rows]),
+                        place(w)))
+        return out
 
     def train_fedavg(self, params, key, client_ids, lr):
         """Algorithm 1 for one model == the population path at P = 1."""
@@ -277,9 +521,17 @@ class VmapBackend(StackedClientBase):
     (``RunConfig.vmap_eval_tile``), where the forward-only compute is
     cheap enough for moderate batching to pay.
 
-    Per generation this issues O(population) dispatches — constant in
-    the number of participating clients, the axis that actually scales —
-    instead of the loop backend's O(population x clients).
+    Per generation the non-fused path issues O(population) dispatches —
+    constant in the number of participating clients, the axis that
+    actually scales — instead of the loop backend's
+    O(population x clients).  With ``cfg.fused`` (the default) the whole
+    generation collapses further into one jitted program per train/eval
+    call (O(1) dispatches per generation; the program still loops shape
+    buckets *inside* the dispatch): the population's keys are stacked to
+    (P, num_blocks) and consumed by the shared bucket bodies above, the
+    master is donated off-CPU when ``master_donation_safe``, and
+    evaluation returns one on-device count vector per generation instead
+    of a blocking ``int(...)`` per key x tile.
     """
 
     name = "vmap"
@@ -289,6 +541,44 @@ class VmapBackend(StackedClientBase):
         super().__init__(api, clients, cfg)
         upd = client_update_fn(api, cfg.local_epochs, cfg.momentum)
         ev = eval_count_fn(api)
+        mask_fn = api.trained_mask
+        self.donate_master = (cfg.fused and master_donation_safe(cfg)
+                              and jax.default_backend() != "cpu")
+
+        # -- fused-generation programs (cfg.fused): one dispatch per call
+        def fused_fill(master, buckets, lr):
+            return cast_like(accumulate_parts(
+                fill_bucket_partial(upd, mask_fn, master, keys, xb, yb,
+                                    w, lr)
+                for keys, xb, yb, w in buckets), master)
+
+        def fused_uploads(master, buckets, lr):
+            return tuple(train_bucket_uploads(upd, master, keys, xb, yb, lr)
+                         for keys, xb, yb, _ in buckets)
+
+        def fused_eval_shared(params, keys, shards):
+            return accumulate_parts(
+                eval_bucket_counts(ev, params, keys, xb, yb,
+                                   tile=cfg.vmap_eval_tile)
+                for xb, yb in shards)
+
+        def fused_eval_paired(ps, keys, shards):
+            return accumulate_parts(
+                eval_paired_bucket_counts(ev, ps, keys, xb, yb,
+                                          tile=cfg.vmap_eval_tile)
+                for xb, yb in shards)
+
+        def fused_fedavg(ps, keys, buckets, lr):
+            return cast_like(accumulate_parts(
+                fedavg_population_bucket(upd, ps, keys, xb, yb, wn, lr)
+                for xb, yb, wn in buckets), ps)
+
+        self._fused_fill = jax.jit(
+            fused_fill, donate_argnums=(0,) if self.donate_master else ())
+        self._fused_uploads = jax.jit(fused_uploads)
+        self._fused_eval_shared = jax.jit(fused_eval_shared)
+        self._fused_eval_paired = jax.jit(fused_eval_paired)
+        self._fused_fedavg = jax.jit(fused_fedavg)
 
         def scan_update(params, key, xb, yb, lr):
             # xb/yb: (L, nb, B, ...) -> stacked updated params (L, ...)
@@ -323,6 +613,8 @@ class VmapBackend(StackedClientBase):
     # -- protocol -----------------------------------------------------------
 
     def train_fill(self, master, keys, groups, lr):
+        if self.cfg.fused:
+            return self._train_fill_fused(master, keys, groups, lr)
         chunks = []
         for key, group in zip(keys, groups):
             if len(group) == 0:
@@ -343,6 +635,39 @@ class VmapBackend(StackedClientBase):
         self.dispatches += len(chunks)
         return master
 
+    def _train_fill_fused(self, master, keys, groups, lr):
+        groups = [np.asarray(g) for g in groups]
+        total = float(sum(self.clients[int(c)].weight
+                          for g in groups for c in g))
+        if total == 0.0:
+            return master
+        buckets = tuple(self._group_bucket_arrays(keys, groups, total))
+        if not buckets:
+            return master
+        lr = jnp.float32(lr)
+        if self.cfg.aggregate_backend == "pallas":
+            # partial fusion: one program for the whole population's
+            # local SGD, then Algorithm 3 through the Pallas kernel
+            outs = self._fused_uploads(master, buckets, lr)
+            self.dispatches += 1
+            chunks = []
+            for (keys_a, _, _, w), out in zip(buckets, outs):
+                gp, s = np.asarray(w).shape
+                flat = jax.tree.map(
+                    lambda x: x.reshape((gp * s,) + x.shape[2:]), out)
+                chunks.append((flat,
+                               np.repeat(np.asarray(keys_a), s, axis=0),
+                               np.asarray(w).reshape(-1)))
+            master = fill_aggregate_stacked(master, chunks,
+                                            mask_fn=self.api.trained_mask,
+                                            backend="pallas", total=1.0)
+            self.dispatches += len(chunks)
+            return master
+        # donated master: the caller's buffers are reused for the update
+        out = self._fused_fill(master, buckets, lr)
+        self.dispatches += 1
+        return out
+
     def _fedavg_from_batches(self, params, jkey, batches, total, lr):
         acc = None
         for xb, yb, w, _ in batches:
@@ -356,6 +681,18 @@ class VmapBackend(StackedClientBase):
         # gather the participants' train shards once for every individual
         batches = list(self._group_train_gather(client_ids))
         total = float(sum(self.clients[int(i)].weight for i in client_ids))
+        if self.cfg.fused:
+            if not params_list:
+                return []
+            ps = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+            karr = jnp.asarray(np.stack([np.asarray(k, np.int32)
+                                         for k in keys]))
+            buckets = tuple((xb, yb, jnp.asarray(w / total))
+                            for xb, yb, w, _ in batches)
+            out = self._fused_fedavg(ps, karr, buckets, jnp.float32(lr))
+            self.dispatches += 1
+            return [jax.tree.map(lambda x: x[i], out)
+                    for i in range(len(params_list))]
         return [self._fedavg_from_batches(p, np.asarray(k, np.int32),
                                           batches, total, lr)
                 for p, k in zip(params_list, keys)]
@@ -384,14 +721,30 @@ class VmapBackend(StackedClientBase):
 
     def eval_shared(self, params, keys, client_ids):
         batches = self._test_batches(client_ids)
+        if self.cfg.fused:
+            karr = jnp.asarray(np.stack([np.asarray(k, np.int32)
+                                         for k in keys]))
+            counts = self._fused_eval_shared(
+                params, karr, tuple((cb.xb, cb.yb) for cb in batches))
+            self.dispatches += 1
+            return self._rates(counts, batches, len(keys))
         return np.asarray([self._eval_one(params, np.asarray(k, np.int32),
                                           batches) for k in keys])
 
     def eval_paired(self, params_list, keys, client_ids):
         batches = self._test_batches(client_ids)
+        if self.cfg.fused:
+            ps = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+            karr = jnp.asarray(np.stack([np.asarray(k, np.int32)
+                                         for k in keys]))
+            counts = self._fused_eval_paired(
+                ps, karr, tuple((cb.xb, cb.yb) for cb in batches))
+            self.dispatches += 1
+            return self._rates(counts, batches, len(keys))
         return np.asarray([self._eval_one(p, np.asarray(k, np.int32),
                                           batches)
                            for p, k in zip(params_list, keys)])
+
 
 
 BACKENDS = {"loop": LoopBackend, "vmap": VmapBackend}

@@ -95,7 +95,7 @@ class FedEngine:
         if reset is not None:        # CodecBackend: drop EF residuals
             reset()
         self.strategy.setup(self)
-        t0 = time.time()
+        t0 = t_prev = time.time()
         for gen in range(1, cfg.generations + 1):
             lr = float(round_decay(cfg.lr0, cfg.lr_decay, gen - 1))
             participants = sample_participants(self.rng, len(self.clients),
@@ -104,7 +104,10 @@ class FedEngine:
             report.down_gb = self.stats.down_bytes / 1e9
             report.up_gb = self.stats.up_bytes / 1e9
             report.train_passes = self.stats.client_train_passes
-            report.wall_s = time.time() - t0
+            now = time.time()
+            report.wall_s = now - t0        # cumulative since run() start
+            report.round_s = now - t_prev   # this round's delta
+            t_prev = now
             self.reports.append(report)
             if callback:
                 callback(gen, report)

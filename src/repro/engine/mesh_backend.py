@@ -25,6 +25,19 @@ only touches its slice of the population:
     its keys over the replicated stacked test set, one dispatch per
     shape bucket for the WHOLE key batch.
 
+With ``RunConfig.fused`` (the default) the per-bucket dispatches above
+collapse to O(1) per generation: the shard_map programs are traceable,
+so one jitted wrapper per phase loops the shape buckets *inside* the
+dispatch — one ``train_fill`` program (master donated off-CPU when
+``backends.master_donation_safe``) and one evaluation program whose
+(2N,) wrong-count vector is fetched with a single ``jax.device_get``.
+The program bodies themselves are shared with ``VmapBackend``
+(``repro.engine.backends``: ``fill_bucket_partial``,
+``eval_bucket_counts``, ...), which is what keeps reduction order — and
+therefore parity — aligned across backends.  The
+``aggregate_backend="pallas"`` route stays partially fused (sharded SGD
+uploads per bucket, Algorithm 3 in the kernel outside the program).
+
 Inside a shard every (individual, client) pair runs under ``lax.scan``
 with the choice key a traced *scalar*, so ``lax.switch`` in the model
 forward stays a real branch (vmapping the key axis would lower to
@@ -67,14 +80,13 @@ from repro.core.aggregate import fill_aggregate_stacked
 from repro.core.federated import client_update_fn, eval_count_fn
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientDataset
-from repro.engine.backends import StackedClientBase
+from repro.engine.backends import StackedClientBase, accumulate_parts, \
+    cast_like, eval_bucket_counts, eval_paired_bucket_counts, \
+    fedavg_population_bucket, fill_bucket_partial, master_donation_safe, \
+    train_bucket_uploads
 from repro.engine.types import RunConfig
 from repro.launch.mesh import data_axes, make_host_mesh, mesh_axis_size
 from repro.launch.sharding import batch_spec
-
-
-def _zeros_f32(tree):
-    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
 
 class MeshBackend(StackedClientBase):
@@ -103,56 +115,32 @@ class MeshBackend(StackedClientBase):
         axes = self.axes
         pop = PartitionSpec(axes)       # leading axis sharded, rest replicated
         rep = PartitionSpec()
+        self.donate_master = (cfg.fused and master_donation_safe(cfg)
+                              and jax.default_backend() != "cpu")
+
+        # The program bodies are the shared fused-bucket bodies from
+        # repro.engine.backends — shard_map slices the population axis,
+        # each device runs the identical body on its slice (so the vmap
+        # backend's fp32 reduction order is preserved expression for
+        # expression under sharding), and train adds a psum.
 
         # -- train_fill: fused local SGD + Algorithm 3 partial sum ----------
         def fill_body(master, keys, xb, yb, w, lr):
             # local shapes: keys (Gl, nb); xb/yb (Gl, S, nbat, B, ...);
-            # w (Gl, S) globally normalized (0 = padding).  The per-group
-            # combine mirrors aggregate._fill_stacked_partial expression
-            # for expression so the vmap backend's fp32 reduction order —
-            # and therefore its results, bit for bit in practice — is
-            # preserved under sharding.
-            def per_group(acc, inp):
-                key, gx, gy, gw = inp
+            # w (Gl, S) globally normalized (0 = padding)
+            return jax.lax.psum(
+                fill_bucket_partial(upd, mask_fn, master,
+                                    keys, xb, yb, w, lr), axes)
 
-                def per_client(_, c):
-                    return None, upd(master, key, c[0], c[1], lr)
-
-                outs = jax.lax.scan(per_client, None, (gx, gy))[1]
-                keys_s = jnp.broadcast_to(key, (gw.shape[0],) + key.shape)
-                masks = jax.vmap(mask_fn)(outs, keys_s)
-
-                def combine(prev, cp, m):
-                    m = m.astype(jnp.float32)
-                    m = m.reshape(m.shape + (1,) * (cp.ndim - m.ndim))
-                    filled = (m * cp.astype(jnp.float32)
-                              + (1 - m) * prev.astype(jnp.float32)[None])
-                    wr = gw.reshape((-1,) + (1,) * (cp.ndim - 1))
-                    return jnp.sum(wr * filled, axis=0)
-
-                part = jax.tree.map(combine, master, outs, masks)
-                return jax.tree.map(jnp.add, acc, part), None
-
-            acc = jax.lax.scan(per_group, _zeros_f32(master),
-                               (keys, xb, yb, w))[0]
-            return jax.lax.psum(acc, axes)
-
-        self._fill_partial = jax.jit(shard_map(
+        fill_sm = shard_map(
             fill_body, mesh=self.mesh,
             in_specs=(rep, pop, pop, pop, pop, rep),
-            out_specs=rep, check_rep=False))
+            out_specs=rep, check_rep=False)
+        self._fill_partial = jax.jit(fill_sm)
 
         # -- train_fill, kernel route: sharded SGD, uploads come back ------
         def uploads_body(master, keys, xb, yb, lr):
-            def per_group(_, inp):
-                key, gx, gy = inp
-
-                def per_client(__, c):
-                    return None, upd(master, key, c[0], c[1], lr)
-
-                return None, jax.lax.scan(per_client, None, (gx, gy))[1]
-
-            return jax.lax.scan(per_group, None, (keys, xb, yb))[1]
+            return train_bucket_uploads(upd, master, keys, xb, yb, lr)
 
         self._train_uploads = jax.jit(shard_map(
             uploads_body, mesh=self.mesh,
@@ -162,62 +150,65 @@ class MeshBackend(StackedClientBase):
         # -- per-individual FedAvg over replicated participants -------------
         def fedavg_body(ps, keys, xb, yb, wn, lr):
             # ps leaves (Pl, ...), keys (Pl, nb) sharded;
-            # xb/yb (S, nbat, B, ...) and wn (S,) replicated.  Mirrors the
-            # vmap backend's scan_update_avg (stacked outs, one weighted
-            # jnp.sum) so reduction order matches across backends.
-            def per_ind(_, inp):
-                p, key = inp
+            # xb/yb (S, nbat, B, ...) and wn (S,) replicated
+            return fedavg_population_bucket(upd, ps, keys, xb, yb, wn, lr)
 
-                def per_client(__, c):
-                    return None, upd(p, key, c[0], c[1], lr)
-
-                outs = jax.lax.scan(per_client, None, (xb, yb))[1]
-
-                def avg(x):
-                    wr = wn.reshape((-1,) + (1,) * (x.ndim - 1))
-                    return jnp.sum(wr * x.astype(jnp.float32), axis=0)
-
-                return None, jax.tree.map(avg, outs)
-
-            return jax.lax.scan(per_ind, None, (ps, keys))[1]
-
-        self._fedavg_partial = jax.jit(shard_map(
+        fedavg_sm = shard_map(
             fedavg_body, mesh=self.mesh,
             in_specs=(pop, pop, rep, rep, rep, rep),
-            out_specs=pop, check_rep=False))
+            out_specs=pop, check_rep=False)
+        self._fedavg_partial = jax.jit(fedavg_sm)
 
         # -- sharded-key evaluation over the replicated test stack ----------
         def eval_shared_body(params, keys, xb, yb):
-            def per_key(_, key):
-                def per_client(a, c):
-                    return a + ev(params, key, c[0], c[1]), None
+            return eval_bucket_counts(ev, params, keys, xb, yb,
+                                      tile=cfg.vmap_eval_tile)
 
-                return None, jax.lax.scan(
-                    per_client, jnp.zeros((), jnp.int32), (xb, yb))[0]
-
-            return jax.lax.scan(per_key, None, keys)[1]
-
-        self._eval_shared_counts = jax.jit(shard_map(
+        eval_shared_sm = shard_map(
             eval_shared_body, mesh=self.mesh,
             in_specs=(rep, pop, rep, rep),
-            out_specs=pop, check_rep=False))
+            out_specs=pop, check_rep=False)
+        self._eval_shared_counts = jax.jit(eval_shared_sm)
 
         def eval_paired_body(ps, keys, xb, yb):
-            def per_pair(_, inp):
-                p, key = inp
+            return eval_paired_bucket_counts(ev, ps, keys, xb, yb,
+                                             tile=cfg.vmap_eval_tile)
 
-                def per_client(a, c):
-                    return a + ev(p, key, c[0], c[1]), None
-
-                return None, jax.lax.scan(
-                    per_client, jnp.zeros((), jnp.int32), (xb, yb))[0]
-
-            return jax.lax.scan(per_pair, None, (ps, keys))[1]
-
-        self._eval_paired_counts = jax.jit(shard_map(
+        eval_paired_sm = shard_map(
             eval_paired_body, mesh=self.mesh,
             in_specs=(pop, pop, rep, rep),
-            out_specs=pop, check_rep=False))
+            out_specs=pop, check_rep=False)
+        self._eval_paired_counts = jax.jit(eval_paired_sm)
+
+        # -- fused composition (cfg.fused): the shard_map programs above
+        # are traceable, so one jitted wrapper per phase loops the shape
+        # buckets INSIDE the dispatch — O(1) dispatches per generation,
+        # and the master is donated off-CPU like the vmap backend.  The
+        # combiners are the shared ones (accumulate_parts / cast_like),
+        # only the per-bucket callable differs (shard_map-wrapped).
+        def fused_fill(master, buckets, lr):
+            return cast_like(accumulate_parts(
+                fill_sm(master, keys, xb, yb, w, lr)
+                for keys, xb, yb, w in buckets), master)
+
+        def fused_eval_shared(params, keys, shards):
+            return accumulate_parts(eval_shared_sm(params, keys, xb, yb)
+                                    for xb, yb in shards)
+
+        def fused_eval_paired(ps, keys, shards):
+            return accumulate_parts(eval_paired_sm(ps, keys, xb, yb)
+                                    for xb, yb in shards)
+
+        def fused_fedavg(ps, keys, buckets, lr):
+            return cast_like(accumulate_parts(
+                fedavg_sm(ps, keys, xb, yb, wn, lr)
+                for xb, yb, wn in buckets), ps)
+
+        self._fused_fill = jax.jit(
+            fused_fill, donate_argnums=(0,) if self.donate_master else ())
+        self._fused_eval_shared = jax.jit(fused_eval_shared)
+        self._fused_eval_paired = jax.jit(fused_eval_paired)
+        self._fused_fedavg = jax.jit(fused_fedavg)
 
     # -- placement helpers --------------------------------------------------
 
@@ -235,41 +226,22 @@ class MeshBackend(StackedClientBase):
     def _put_pop_tree(self, tree):
         return jax.tree.map(self._put_pop, tree)
 
+    def _place_test(self, arr):
+        """Replicate the cached test stacks over the mesh once, so the
+        eval programs (in_specs=rep) never re-transfer them."""
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, PartitionSpec()))
+
     # -- train_fill ----------------------------------------------------------
 
-    def _group_bucket_arrays(self, keys, groups, total):
-        """Per shape bucket of the resident train store, the group-major
-        stacked arrays the sharded programs consume: (keys (Gp, nb) int32,
-        xb (Gp, S, nbat, B, ...), yb, w (Gp, S) f32 normalized by
-        ``total``), with G padded to Gp (a mesh multiple) and ragged
-        groups padded to S clients — all padding at weight 0."""
-        out = []
-        g_n = len(groups)
-        pad = self._pad(g_n)
-        keys_arr = np.zeros((g_n + pad, self.api.num_blocks), np.int32)
-        keys_arr[:g_n] = np.stack([np.asarray(k, np.int32) for k in keys])
-        karr = self._put_pop(keys_arr)     # one transfer, shared by buckets
-        for pos, xb_all, yb_all in self._train_store():
-            entries = [[(pos[int(c)], self.clients[int(c)].weight)
-                        for c in g if int(c) in pos] for g in groups]
-            s_max = max((len(e) for e in entries), default=0)
-            if s_max == 0:
-                continue
-            rows = np.zeros((g_n + pad, s_max), np.int32)
-            w = np.zeros((g_n + pad, s_max), np.float32)
-            for g, e in enumerate(entries):
-                if not e:
-                    continue
-                rows[g, :len(e)] = [row for row, _ in e]
-                # normalize exactly as fill_aggregate_stacked does (f32
-                # weight vector / f64 total) — a 1-ulp difference here
-                # amplifies over generations of SGD
-                w[g, :len(e)] = np.asarray([wt for _, wt in e],
-                                           np.float32) / total
-            xb = self._put_pop(xb_all[rows])
-            yb = self._put_pop(yb_all[rows])
-            out.append((karr, xb, yb, self._put_pop(w)))
-        return out
+    def _group_bucket_arrays(self, keys, groups, total, pad_groups=None,
+                             place=None):
+        """The base builder with the group axis padded to a mesh multiple
+        and every array placed population-sharded (weight-0 padding)."""
+        g_pad = self._pad(len(groups)) if pad_groups is None else pad_groups
+        return super()._group_bucket_arrays(
+            keys, groups, total, pad_groups=g_pad,
+            place=self._put_pop if place is None else place)
 
     def train_fill(self, master, keys, groups, lr):
         groups = [np.asarray(g) for g in groups]
@@ -283,6 +255,12 @@ class MeshBackend(StackedClientBase):
         if self.cfg.aggregate_backend == "pallas":
             return self._train_fill_pallas(master, buckets, lr)
         lr = jnp.float32(lr)
+        if self.cfg.fused:
+            # one dispatch for the whole generation's fill-train (the
+            # bucket loop runs inside the program; donated master)
+            out = self._fused_fill(master, tuple(buckets), lr)
+            self.dispatches += 1
+            return out
         acc = None
         for keys_a, xb, yb, w in buckets:
             part = self._fill_partial(master, keys_a, xb, yb, w, lr)
@@ -306,7 +284,7 @@ class MeshBackend(StackedClientBase):
                            np.asarray(w).reshape(-1)))
         master = fill_aggregate_stacked(master, chunks,
                                         mask_fn=self.api.trained_mask,
-                                        backend="pallas")
+                                        backend="pallas", total=1.0)
         self.dispatches += len(chunks)
         return master
 
@@ -325,6 +303,13 @@ class MeshBackend(StackedClientBase):
             jax.tree.map(lambda *xs: jnp.stack(xs), *plist))
         keys_arr = self._put_pop(np.stack(klist))
         lr = jnp.float32(lr)
+        if self.cfg.fused:
+            buckets = tuple((xb, yb, jnp.asarray(w / total))
+                            for xb, yb, w, _ in
+                            self._group_train_gather(client_ids))
+            out = self._fused_fedavg(stacked, keys_arr, buckets, lr)
+            self.dispatches += 1
+            return [jax.tree.map(lambda x: x[i], out) for i in range(n)]
         acc = None
         for xb, yb, w, _ in self._group_train_gather(client_ids):
             part = self._fedavg_partial(stacked, keys_arr, xb, yb,
@@ -344,6 +329,11 @@ class MeshBackend(StackedClientBase):
     def eval_shared(self, params, keys, client_ids):
         batches = self._test_batches(client_ids)
         karr = self._padded_keys(keys)
+        if self.cfg.fused:
+            counts = self._fused_eval_shared(
+                params, karr, tuple((cb.xb, cb.yb) for cb in batches))
+            self.dispatches += 1
+            return self._rates(counts, batches, len(keys))
         wrong = np.zeros(karr.shape[0], np.int64)
         total = 0
         for cb in batches:
@@ -362,6 +352,11 @@ class MeshBackend(StackedClientBase):
         stacked = self._put_pop_tree(
             jax.tree.map(lambda *xs: jnp.stack(xs), *plist))
         karr = self._padded_keys(keys)
+        if self.cfg.fused:
+            counts = self._fused_eval_paired(
+                stacked, karr, tuple((cb.xb, cb.yb) for cb in batches))
+            self.dispatches += 1
+            return self._rates(counts, batches, len(keys))
         wrong = np.zeros(karr.shape[0], np.int64)
         total = 0
         for cb in batches:

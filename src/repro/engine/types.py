@@ -60,7 +60,20 @@ class RunConfig:
         O(population / devices) dispatches/gen).  Validated when the
         engine builds the backend.
       * ``vmap_eval_tile`` — clients evaluated per inner vmap tile in
-        the vmap backend's forward-only eval path (>= 1).
+        the batched backends' forward-only eval paths (>= 1).  Tiling
+        never changes results: error counts are integers, so any
+        client-axis batching yields bitwise-identical totals.
+      * ``fused`` — run each generation of the batched backends
+        (``"vmap"``, ``"mesh"``) as a constant number of jitted
+        dispatches: one program per ``train_fill`` (local-SGD scan +
+        per-group weighting + the Algorithm 3 partial sums, master
+        passed with ``donate_argnums`` off-CPU so the per-generation
+        master update reuses its buffers) and one per evaluation call
+        (all stacked keys -> one on-device wrong-count vector, fetched
+        with a single ``jax.device_get``).  Defaults to True — the
+        measured-faster path (see ``BENCH_engine.json``); ``False``
+        restores the per-bucket/per-key dispatch pattern.  Ignored by
+        the ``"loop"`` reference backend.
 
     Communication (``repro.comm``; validated here like
     ``aggregate_backend``):
@@ -87,6 +100,7 @@ class RunConfig:
     aggregate_backend: str = "xla"      # Algorithm 3 route: 'xla' | 'pallas'
     backend: str = "loop"               # execution: 'loop' | 'vmap' | 'mesh'
     vmap_eval_tile: int = 32            # clients vmapped per eval scan step
+    fused: bool = True                  # one dispatch per generation phase
     uplink_codec: str = "none"          # client->server payload codec
     downlink_codec: str = "none"        # server->client payload codec
 
@@ -214,7 +228,11 @@ class RoundReport:
     Engine-stamped fields: ``down_gb`` / ``up_gb`` are the CUMULATIVE
     CommStats totals in gigabytes (1e9 bytes) at the end of this round;
     ``train_passes`` the cumulative (individual, client) local training
-    passes; ``wall_s`` seconds since ``run()`` started."""
+    passes.  ``wall_s`` is CUMULATIVE: seconds since ``run()`` started
+    (kept cumulative for the legacy history layout — it is *not* a
+    per-round time); ``round_s`` is this round's wall-clock delta, the
+    per-generation number benchmarks and steady-state comparisons
+    want."""
     gen: int
     objs: Optional[np.ndarray] = None          # (2N, 2) [err, flops]
     parent_keys: Optional[List[np.ndarray]] = None
@@ -226,12 +244,13 @@ class RoundReport:
     down_gb: float = 0.0
     up_gb: float = 0.0
     train_passes: int = 0
-    wall_s: float = 0.0
+    wall_s: float = 0.0      # cumulative since run() start
+    round_s: float = 0.0     # this round's wall-clock delta
 
 
 HISTORY_FIELDS = ("gen", "objs", "parent_keys", "best_err", "knee_err",
                   "best_key", "knee_key", "down_gb", "up_gb",
-                  "train_passes", "wall_s")
+                  "train_passes", "wall_s", "round_s")
 
 
 def append_report(hist: Dict[str, list], report: RoundReport) -> None:

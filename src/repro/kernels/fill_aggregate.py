@@ -27,8 +27,16 @@ def _kernel(c_ref, m_ref, w_ref, p_ref, o_ref):
 
 
 def fill_aggregate(clients, masks, weights, prev, *, block=DEFAULT_BLOCK,
-                   interpret=True):
-    """clients, masks: (m, P); weights: (m,); prev: (P,) -> (P,)."""
+                   interpret=True, donate_prev=False):
+    """clients, masks: (m, P); weights: (m,); prev: (P,) -> (P,).
+
+    ``donate_prev`` aliases the ``prev`` buffer into the output
+    (``input_output_aliases``): grid step i reads prev's block i before
+    writing out's block i and blocks never overlap, so the master update
+    can reuse the previous master's buffer instead of allocating a fresh
+    (P,) vector.  Only pass it when the caller no longer needs ``prev``
+    after the call (XLA copies defensively otherwise, losing the
+    saving)."""
     m, p = clients.shape
     pad = (-p) % block
     if pad:
@@ -50,6 +58,7 @@ def fill_aggregate(clients, masks, weights, prev, *, block=DEFAULT_BLOCK,
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((p + pad,), prev.dtype),
+        input_output_aliases={3: 0} if donate_prev else {},
         interpret=interpret,
     )(clients, masks, weights, prev_p)
     return out[:p]

@@ -52,10 +52,30 @@ def ssd_scan(xs, a, bm, cm, initial_state=None):
 
 
 @jax.jit
-def fill_aggregate(clients, masks, weights, prev):
-    """clients, masks: (m, P); weights: (m,); prev: (P,) -> (P,)."""
+def _fill_aggregate_jit(clients, masks, weights, prev):
     return _fa.fill_aggregate(clients, masks, weights, prev,
                               interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, donate_argnums=(3,))
+def _fill_aggregate_donate_jit(clients, masks, weights, prev):
+    return _fa.fill_aggregate(clients, masks, weights, prev,
+                              interpret=INTERPRET, donate_prev=True)
+
+
+def fill_aggregate(clients, masks, weights, prev, donate_prev=False):
+    """clients, masks: (m, P); weights: (m,); prev: (P,) -> (P,).
+
+    ``donate_prev`` donates the ``prev`` buffer at the jit boundary AND
+    aliases the kernel's (block-padded) prev into its output
+    (``input_output_aliases``), so the master update writes over the
+    previous master's vector instead of allocating a fresh one.  Pass it
+    only when ``prev`` is dead after the call (the last-chunk master
+    update).  On CPU — where XLA cannot reuse donated buffers and warns
+    per dispatch — the plain path is used regardless."""
+    if donate_prev and jax.default_backend() != "cpu":
+        return _fill_aggregate_donate_jit(clients, masks, weights, prev)
+    return _fill_aggregate_jit(clients, masks, weights, prev)
 
 
 @jax.jit

@@ -247,6 +247,31 @@ def test_codec_backend_parity(codec_parity, pair, bk):
         np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
 
 
+@pytest.mark.parametrize("codec", ["cast", "int8", "topk:0.25"])
+def test_fused_nonfused_codec_parity(api, codec):
+    """Each codec layered on top of the fused path reproduces the
+    non-fused run exactly: the codec transform is a deterministic
+    function of the (bitwise-identical) aggregates, so CommStats, per-
+    generation errors and masters all match."""
+    clients = tiny_clients()
+    out = {}
+    for fused in (False, True):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=4, generations=2, seed=0,
+                                  lr0=0.01, backend="vmap", fused=fused,
+                                  uplink_codec=codec, downlink_codec=codec))
+        out[fused] = eng.run()
+    assert dataclasses.asdict(out[False].stats) == \
+        dataclasses.asdict(out[True].stats)
+    for a, b in zip(out[False].reports, out[True].reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-6)
+    diff = max(float(jnp.abs(jnp.asarray(p) - jnp.asarray(q)).max())
+               for p, q in zip(
+                   jax.tree.leaves(out[False].extras["final_master"]),
+                   jax.tree.leaves(out[True].extras["final_master"])))
+    assert diff <= 1e-6
+
+
 def test_int8_wire_reduction(api):
     """int8 on both directions cuts down+up wire bytes >= 3.5x vs fp32
     (keys and error counts stay uncompressed, so < 4.0x exactly)."""

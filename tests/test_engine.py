@@ -106,23 +106,182 @@ def test_vmap_dispatches_are_constant_in_clients(api):
     assert eng.backend.dispatches > 3 * counts[8]
 
 
-def test_mesh_dispatches_constant_in_clients_and_below_vmap(api):
+def test_mesh_dispatches_constant_in_clients_and_below_nonfused_vmap(api):
     """The mesh backend batches the whole population into O(#buckets)
-    sharded dispatches per phase — constant in clients AND below the
-    vmap backend's O(population)."""
+    sharded dispatches per phase — constant in clients AND (on the
+    non-fused path, where the vmap backend pays O(population)) below the
+    vmap backend's count.  Fused, both collapse to the same constant —
+    see test_fused_dispatches_per_generation."""
     counts = {}
     for m in (4, 8):
         eng = FedEngine(api, tiny_clients(num_clients=m, n=240 * m // 4),
                         RunConfig(population=4, generations=1, seed=0,
-                                  backend="mesh"))
+                                  backend="mesh", fused=False))
         eng.run()
         counts[m] = eng.backend.dispatches
     assert counts[4] == counts[8]
     eng = FedEngine(api, tiny_clients(num_clients=8),
                     RunConfig(population=4, generations=1, seed=0,
-                              backend="vmap"))
+                              backend="vmap", fused=False))
     eng.run()
     assert counts[8] < eng.backend.dispatches
+
+
+# ---------------------------------------------------------------------------
+# fused-generation execution (RunConfig.fused, the default)
+# ---------------------------------------------------------------------------
+
+# RealTimeNas issues train_fill twice on gen 1 (parents + offspring) and
+# once per later gen, plus one eval_shared per gen; fused, each of those
+# is exactly ONE dispatch regardless of clients, population and shape
+# buckets — the dispatch-count regression bound the fused path claims.
+def fused_dispatch_bound(generations: int) -> int:
+    return 2 * generations + 1
+
+
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_fused_dispatches_per_generation(api, bk):
+    gens = 2
+    eng = FedEngine(api, tiny_clients(),
+                    RunConfig(population=4, generations=gens, seed=0,
+                              backend=bk))
+    eng.run()
+    assert eng.backend.dispatches == fused_dispatch_bound(gens)
+
+
+def ragged_clients():
+    """Two shape buckets: 4 clients with 60-sample shards and 2 with
+    100-sample shards (train stacks of 2 vs 4 batches of 20)."""
+    x, y = make_classification(3, 440, image=8, signal=1.5, noise=0.5)
+    shards = [np.arange(60) + 60 * i for i in range(4)] \
+        + [240 + np.arange(100), 340 + np.arange(100)]
+    return make_clients(x, y, shards, batch=20, test_batch=20)
+
+
+def test_fused_dispatches_bounded_by_buckets_and_ragged_parity(api):
+    """Multi-bucket client sets stay within the fused dispatch bound
+    (the bucket loop runs inside the program) and agree with the loop
+    reference — ragged groups exercise the weight-0 padding rows."""
+    clients = ragged_clients()
+    gens = 2
+    out = {}
+    for bk in ("loop", "vmap", "mesh"):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=3, generations=gens, seed=0,
+                                  lr0=0.01, backend=bk))
+        out[bk] = eng.run()
+        if bk != "loop":
+            assert eng.backend.dispatches == fused_dispatch_bound(gens)
+    for bk in ("vmap", "mesh"):
+        assert dataclasses.asdict(out["loop"].stats) == \
+            dataclasses.asdict(out[bk].stats)
+        assert max_leaf_diff(out["loop"].extras["final_master"],
+                             out[bk].extras["final_master"]) <= 1e-5
+        for a, b in zip(out["loop"].reports, out[bk].reports):
+            np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+
+
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_fused_vs_nonfused_parity(api, bk):
+    """The fused path must reproduce the per-bucket path: identical
+    CommStats, zero error diff and master params within 1e-6."""
+    clients = tiny_clients()
+    out = {}
+    for fused in (False, True):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=4, generations=2, seed=0,
+                                  lr0=0.01, backend=bk, fused=fused))
+        out[fused] = eng.run()
+    assert dataclasses.asdict(out[False].stats) == \
+        dataclasses.asdict(out[True].stats)
+    for a, b in zip(out[False].reports, out[True].reports):
+        np.testing.assert_array_equal(a.objs, b.objs)
+    assert max_leaf_diff(out[False].extras["final_master"],
+                         out[True].extras["final_master"]) <= 1e-6
+
+
+def test_fused_vs_nonfused_parity_pallas(api):
+    """The partially-fused pallas route (one SGD program, Algorithm 3 in
+    the kernel) agrees with the non-fused pallas path — both normalize
+    weights once (``fill_aggregate_stacked(total=...)``), so the only
+    difference is the kernel's row-reduction grouping."""
+    clients = tiny_clients()
+    out = {}
+    for fused in (False, True):
+        out[fused] = FedEngine(
+            api, clients,
+            RunConfig(population=4, generations=2, seed=0, lr0=0.01,
+                      backend="vmap", fused=fused,
+                      aggregate_backend="pallas")).run()
+    assert dataclasses.asdict(out[False].stats) == \
+        dataclasses.asdict(out[True].stats)
+    for a, b in zip(out[False].reports, out[True].reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-6)
+    assert max_leaf_diff(out[False].extras["final_master"],
+                         out[True].extras["final_master"]) <= 1e-6
+
+
+def test_fused_offline_and_fedavg_parity(api):
+    """The fused fedavg-population / eval-paired paths (OfflineNas) and
+    the fused FedAvg baseline agree with their non-fused selves."""
+    clients = tiny_clients(num_clients=4, n=240)
+    key = np.array([1, 0, 2, 3], np.int32)
+    for strat in (lambda: OfflineNas(), lambda: FedAvgBaseline(key)):
+        out = {}
+        for fused in (False, True):
+            out[fused] = FedEngine(
+                api, clients,
+                RunConfig(population=3, generations=1, seed=1, lr0=0.01,
+                          backend="vmap", fused=fused),
+                strategy=strat()).run()
+        assert dataclasses.asdict(out[False].stats) == \
+            dataclasses.asdict(out[True].stats)
+        for a, b in zip(out[False].reports, out[True].reports):
+            if a.objs is not None:
+                np.testing.assert_array_equal(a.objs, b.objs)
+            assert a.best_err == b.best_err
+
+
+def test_master_donation_gating(api):
+    """Donation is only enabled when nothing re-reads the old master:
+    lossy uplink codecs (CodecBackend re-reads it for the uplink delta)
+    and CPU hosts (XLA cannot reuse the buffers) disable it."""
+    from repro.engine.backends import VmapBackend, master_donation_safe
+    assert master_donation_safe(RunConfig())
+    assert master_donation_safe(RunConfig(downlink_codec="cast"))
+    assert not master_donation_safe(RunConfig(uplink_codec="int8"))
+    assert not master_donation_safe(RunConfig(uplink_codec="topk:0.25"))
+    if jax.default_backend() == "cpu":
+        backend = VmapBackend(api, tiny_clients(num_clients=4, n=240),
+                              RunConfig())
+        assert backend.donate_master is False
+
+
+def test_test_batches_lru_refreshes_on_hit(api):
+    """Size-2 test-stack cache is true LRU: a hit refreshes recency, so
+    alternating participant sets never evict the entry just used."""
+    from repro.engine.backends import VmapBackend
+    clients = tiny_clients(num_clients=6, n=360)
+    backend = VmapBackend(api, clients, RunConfig())
+    a, b, c = np.array([0, 1]), np.array([2, 3]), np.array([4, 5])
+    backend._test_batches(a)
+    backend._test_batches(b)
+    backend._test_batches(a)       # hit must refresh A's recency
+    backend._test_batches(c)       # evicts B (least recently used), not A
+    assert set(backend._test_cache) == {(0, 1), (4, 5)}
+
+
+def test_round_report_round_s(rt_parity):
+    """wall_s stays cumulative (documented); round_s is the per-round
+    delta and both are surfaced in the history dict."""
+    res = rt_parity["vmap"][0]
+    walls = [r.wall_s for r in res.reports]
+    rounds = [r.round_s for r in res.reports]
+    assert all(w2 >= w1 for w1, w2 in zip(walls, walls[1:]))
+    assert all(r >= 0 for r in rounds)
+    assert sum(rounds) == pytest.approx(walls[-1], abs=1e-6)
+    hist = res.history()
+    assert hist["round_s"] == rounds and hist["wall_s"] == walls
 
 
 MESH_8DEV_SCRIPT = """
@@ -147,6 +306,9 @@ for bk in ("vmap", "mesh"):
                     RunConfig(population=4, generations=2, seed=0,
                               lr0=0.01, backend=bk))
     out[bk] = eng.run()
+    # fused (default): O(1) dispatches per generation — 2 train fills on
+    # gen 1, 1 per later gen, 1 eval per gen — even on a real 8-way mesh
+    assert eng.backend.dispatches == 2 * 2 + 1, (bk, eng.backend.dispatches)
     if bk == "mesh":
         assert eng.backend.num_devices == 8, eng.backend.num_devices
 a, b = out["vmap"], out["mesh"]

@@ -84,6 +84,18 @@ def test_fill_aggregate_sweep(dtype, m, p):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32),
                                rtol=TOL[dtype], atol=TOL[dtype])
+    # prev-buffer donation must not change results: the kernel-level
+    # aliasing path (input_output_aliases, exercised directly — the ops
+    # wrapper's donating jit route is gated off-CPU)
+    from repro.kernels import fill_aggregate as _fa
+    donated = _fa.fill_aggregate(cl, mk, w, prev, interpret=True,
+                                 donate_prev=True)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(donated, np.float32))
+    # and the ops wrapper accepts the flag on any host
+    wrapped = ops.fill_aggregate(cl, mk, w, prev, donate_prev=True)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(wrapped, np.float32))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
