@@ -18,7 +18,11 @@ cross-device config (many small clients — the regime where dispatch
 count, not compute, is the bottleneck) AND the payload codecs
 (``--mode codecs``: per-codec wire bytes, compression ratio vs fp32,
 and the int8+error-feedback vs fp32 search trajectory; ``--out`` writes
-the JSON that ``benchmarks/results/`` tracks).  ``--mode backends``
+the JSON that ``benchmarks/results/`` tracks).  ``--mode availability``
+sweeps the real-time client model (``ClientSimConfig``): 0-50%
+post-download dropout under IID and Dirichlet partitions plus a
+deterministic-straggler scenario, reporting search quality, survivor
+counts and the wasted-download ledger.  ``--mode backends``
 writes ``BENCH_engine.json`` (dispatches/gen, wall-clock/gen, peak live
 bytes per variant, the fused speedups and the scalar-vs-batched-key
 measurement) — the repo root keeps the CI-host point of that perf
@@ -47,23 +51,28 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import make_api, nsga2
-from repro.data import make_classification, make_clients, partition_iid, \
-    partition_label
-from repro.engine import FedAvgBaseline, FedEngine, OfflineNas, RealTimeNas, \
-    RunConfig
+from repro.data import make_classification, make_clients, \
+    partition_dirichlet, partition_iid, partition_label
+from repro.engine import ClientSimConfig, FedAvgBaseline, FedEngine, \
+    OfflineNas, RealTimeNas, RunConfig
 
 IMAGE = 16
 RESNET_LIKE_KEY = np.ones(4, dtype=np.int32)   # all-residual master path
 
 
-def build_clients(num_clients: int, iid: bool, seed: int = 0,
+def build_clients(num_clients: int, iid: bool = True, seed: int = 0,
                   n: int = 2000, batch: int = 50, test_batch: int = 50,
-                  image: int = IMAGE):
+                  image: int = IMAGE, partition: Optional[str] = None):
     x, y = make_classification(seed, n, image=image, signal=1.2, noise=0.8)
-    if iid:
+    partition = partition or ("iid" if iid else "label")
+    if partition == "iid":
         shards = partition_iid(seed, n, num_clients)
-    else:
+    elif partition == "label":
         shards = partition_label(seed, y, num_clients, classes_per_client=5)
+    elif partition == "dirichlet":
+        shards = partition_dirichlet(seed, y, num_clients, alpha=0.5)
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
     return make_clients(x, y, shards, batch=batch, test_batch=test_batch)
 
 
@@ -367,6 +376,77 @@ def codec_trajectory(api=None, clients=None, generations: int = 30,
                               + runs[codec].stats.up_wire_bytes))}
 
 
+def compare_availability(api=None, generations: int = 10,
+                         population: int = 6, seed: int = 0,
+                         num_clients: int = 8, samples: int = 960,
+                         dropouts=(0.0, 0.1, 0.3, 0.5),
+                         partitions=("iid", "dirichlet"),
+                         engine_backend: str = "vmap") -> Dict:
+    """The real-time availability sweep the paper's headline claim asks
+    for: the same search under 0-50% post-download dropout, on IID and
+    Dirichlet(0.5) partitions.  Reports the final best test error, the
+    survivor counts and the wasted-download ledger per setting, plus a
+    deterministic-straggler scenario (slowdown 10x vs deadline 2.0 —
+    the stragglers miss every round).  dropout=0.0 is the synchronous
+    baseline: it reproduces the no-sim trajectory bit for bit, so the
+    sweep's deltas are pure availability effects."""
+    api = api or build_api()
+    out: Dict = {"generations": generations, "population": population,
+                 "clients": num_clients, "engine_backend": engine_backend,
+                 "partitions": {}}
+    for part in partitions:
+        clients = build_clients(num_clients, seed=seed, n=samples,
+                                batch=10, test_batch=10, image=8,
+                                partition=part)
+        rows = {}
+        for rate in dropouts:
+            sim = ClientSimConfig(dropout=rate, seed=seed + 1)
+            res = FedEngine(api, clients,
+                            RunConfig(population=population,
+                                      generations=generations, seed=seed,
+                                      lr0=0.05, backend=engine_backend,
+                                      client_sim=sim)).run()
+            s = res.stats
+            rows[str(rate)] = {
+                "best_err": float(res.reports[-1].best_err),
+                "mean_survivors": (float(np.mean(
+                    [r.n_survivors for r in res.reports]))
+                    if sim.is_active else float(num_clients)),
+                "dropped_total": (int(sum(r.n_dropped
+                                          for r in res.reports))
+                                  if sim.is_active else 0),
+                "up_mb": s.up_bytes / 1e6,
+                "down_mb": s.down_bytes / 1e6,
+                "wasted_down_mb": s.wasted_down_bytes / 1e6,
+                "wasted_frac_of_down": (s.wasted_down_bytes
+                                        / max(s.down_bytes, 1.0)),
+            }
+        out["partitions"][part] = rows
+    # deterministic stragglers: a third of the fleet 10x slower than a
+    # 2.0-round deadline — they receive every broadcast and finish none
+    clients = build_clients(num_clients, seed=seed, n=samples,
+                            batch=10, test_batch=10, image=8,
+                            partition="iid")
+    sim = ClientSimConfig(straggler_fraction=1 / 3,
+                          straggler_slowdown=10.0, round_deadline=2.0,
+                          seed=seed + 1)
+    res = FedEngine(api, clients,
+                    RunConfig(population=population,
+                              generations=generations, seed=seed,
+                              lr0=0.05, backend=engine_backend,
+                              client_sim=sim)).run()
+    out["stragglers"] = {
+        "config": {"fraction": 1 / 3, "slowdown": 10.0, "deadline": 2.0},
+        "best_err": float(res.reports[-1].best_err),
+        "mean_survivors": float(np.mean([r.n_survivors
+                                         for r in res.reports])),
+        "wasted_down_mb": res.stats.wasted_down_bytes / 1e6,
+        "wasted_frac_of_down": (res.stats.wasted_down_bytes
+                                / max(res.stats.down_bytes, 1.0)),
+    }
+    return out
+
+
 def summarize_front(api, hist) -> List[Dict]:
     """Final-generation Pareto front -> [{key, err, flops}] (Fig 8)."""
     objs = hist["objs"][-1]
@@ -488,11 +568,41 @@ def _run_codec_mode(args) -> Dict:
     return rep
 
 
+def _run_availability_mode(args) -> Dict:
+    api = build_api()
+    population = 6 if args.population is None else args.population
+    gens = 10 if args.generations is None else args.generations
+    rep = compare_availability(api, generations=gens, population=population,
+                               seed=args.seed,
+                               num_clients=args.avail_clients,
+                               samples=args.avail_samples,
+                               dropouts=tuple(args.dropouts))
+    print(f"\navailability ({rep['clients']} clients x {rep['generations']} "
+          f"generations, population {rep['population']}, "
+          f"{rep['engine_backend']} backend):")
+    for part, rows in rep["partitions"].items():
+        for rate, r in rows.items():
+            print(f"{part:>9} dropout {float(rate):4.2f}: best err "
+                  f"{r['best_err']:.3f} | surv {r['mean_survivors']:4.1f} | "
+                  f"up {r['up_mb']:7.2f} MB | wasted down "
+                  f"{r['wasted_down_mb']:7.2f} MB "
+                  f"({100 * r['wasted_frac_of_down']:4.1f}% of down)")
+    s = rep["stragglers"]
+    print(f"stragglers (1/3 at 10x vs deadline 2.0): best err "
+          f"{s['best_err']:.3f} | surv {s['mean_survivors']:4.1f} | "
+          f"wasted down {s['wasted_down_mb']:7.2f} MB "
+          f"({100 * s['wasted_frac_of_down']:4.1f}% of down)")
+    return rep
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(
-        description="execution-backend and payload-codec comparisons")
-    ap.add_argument("--mode", choices=["backends", "codecs", "both"],
+        description="execution-backend, payload-codec and "
+                    "client-availability comparisons")
+    ap.add_argument("--mode",
+                    choices=["backends", "codecs", "availability", "both",
+                             "all"],
                     default="both")
     ap.add_argument("--generations", type=int, default=None,
                     help="defaults to 25 in backends mode (steady-state "
@@ -528,6 +638,13 @@ def main():
                          "batched-key vmap per phase (0 disables)")
     ap.add_argument("--codecs", nargs="+",
                     default=["none", "cast", "int8", "topk"])
+    ap.add_argument("--dropouts", nargs="+", type=float,
+                    default=[0.0, 0.1, 0.3, 0.5],
+                    help="availability mode: post-download dropout rates")
+    ap.add_argument("--avail-clients", type=int, default=8,
+                    help="availability mode: client count")
+    ap.add_argument("--avail-samples", type=int, default=960,
+                    help="availability mode: total samples")
     ap.add_argument("--trajectory-generations", type=int, default=30,
                     help="int8-vs-fp32 trajectory length in codec mode "
                          "(0 disables)")
@@ -537,10 +654,12 @@ def main():
     args = ap.parse_args()
 
     rep: Dict = {}
-    if args.mode in ("backends", "both"):
+    if args.mode in ("backends", "both", "all"):
         rep["backends"] = _run_backend_mode(args)
-    if args.mode in ("codecs", "both"):
+    if args.mode in ("codecs", "both", "all"):
         rep["codecs"] = _run_codec_mode(args)
+    if args.mode in ("availability", "all"):
+        rep["availability"] = _run_availability_mode(args)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

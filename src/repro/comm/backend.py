@@ -94,28 +94,34 @@ class CodecBackend:
 
     # -- ExecutionBackend protocol -------------------------------------------
 
-    def train_fill(self, master: Params, keys, groups, lr: float) -> Params:
+    def train_fill(self, master: Params, keys, groups, lr: float,
+                   survivors=None) -> Params:
         m_down = self._down(master)
-        raw = self.inner.train_fill(m_down, keys, groups, lr)
+        raw = self.inner.train_fill(m_down, keys, groups, lr,
+                                    survivors=survivors)
         return self._up(m_down, raw, "fill")
 
     def train_fedavg(self, params: Params, key, client_ids,
-                     lr: float) -> Params:
+                     lr: float, survivors=None) -> Params:
         p_down = self._down(params)
-        raw = self.inner.train_fedavg(p_down, key, client_ids, lr)
+        raw = self.inner.train_fedavg(p_down, key, client_ids, lr,
+                                      survivors=survivors)
         return self._up(p_down, raw, "fedavg")
 
     def train_fedavg_population(self, params_list: Sequence[Params], keys,
-                                client_ids, lr: float) -> List[Params]:
+                                client_ids, lr: float,
+                                survivors=None) -> List[Params]:
         downs = [self._down(p) for p in params_list]
-        raws = self.inner.train_fedavg_population(downs, keys,
-                                                  client_ids, lr)
+        raws = self.inner.train_fedavg_population(downs, keys, client_ids,
+                                                  lr, survivors=survivors)
         return [self._up(d, r, stream=None) for d, r in zip(downs, raws)]
 
-    def eval_shared(self, params: Params, keys, client_ids) -> np.ndarray:
-        return self.inner.eval_shared(self._down(params), keys, client_ids)
+    def eval_shared(self, params: Params, keys, client_ids,
+                    survivors=None) -> np.ndarray:
+        return self.inner.eval_shared(self._down(params), keys, client_ids,
+                                      survivors=survivors)
 
     def eval_paired(self, params_list: Sequence[Params], keys,
-                    client_ids) -> np.ndarray:
+                    client_ids, survivors=None) -> np.ndarray:
         return self.inner.eval_paired([self._down(p) for p in params_list],
-                                      keys, client_ids)
+                                      keys, client_ids, survivors=survivors)

@@ -24,18 +24,35 @@ def sample_participants(rng: np.random.Generator, total_clients: int,
 
 
 def sample_client_groups(rng: np.random.Generator, participants: np.ndarray,
-                         n_individuals: int) -> List[np.ndarray]:
+                         n_individuals: int,
+                         strict: bool = False) -> List[np.ndarray]:
     """Partition participants into N disjoint groups of L = floor(m/N).
 
-    Requires m >= N (paper assumes #clients >= population size).  Clients
-    beyond N*L idle this round, matching the floor in the paper.
+    The paper assumes m >= N (#clients >= population size); in that
+    regime clients beyond N*L idle this round, matching the floor in the
+    paper.  Under real-time availability (`ClientSimConfig`) fewer than
+    N clients may show up, so instead of failing the round degrades
+    gracefully: each of the first m groups gets one client and the rest
+    stay empty.  An empty group trains nobody, so its individual's
+    blocks are simply *filled* from the previous master during
+    aggregation — exactly Algorithm 3's semantics for untrained
+    branches — and with m == 0 the whole round leaves the master
+    untouched.
+
+    ``strict=True`` restores the legacy m >= N requirement: a fully
+    synchronous run (no availability simulation) that is short of
+    clients is a *misconfiguration*, not churn, and should fail loudly
+    rather than silently search over mostly-empty groups.
     """
     m = len(participants)
-    if m < n_individuals:
+    if strict and m < n_individuals:
         raise ValueError(f"need >= {n_individuals} clients, got {m}")
-    l_per = m // n_individuals
     perm = rng.permutation(participants)
-    return [perm[g * l_per:(g + 1) * l_per] for g in range(n_individuals)]
+    if m >= n_individuals:
+        l_per = m // n_individuals
+        return [perm[g * l_per:(g + 1) * l_per]
+                for g in range(n_individuals)]
+    return [perm[g:g + 1] for g in range(n_individuals)]
 
 
 def sample_population_keys(rng: np.random.Generator, n: int,

@@ -19,19 +19,39 @@ def partition_iid(seed: int, n: int, num_clients: int) -> List[np.ndarray]:
 
 def partition_label(seed: int, labels: np.ndarray, num_clients: int,
                     classes_per_client: int = 5) -> List[np.ndarray]:
+    """Non-IID label partition: every client holds data from exactly
+    ``classes_per_client`` DISTINCT classes (the paper uses 5 of 10).
+
+    Class sets are assigned by a balanced greedy deal: each class starts
+    with a quota of ``floor/ceil(k*cpc / C)`` holder slots (the
+    remainder spread over a random subset) and each client takes the
+    ``cpc`` classes with the largest remaining quota, random tiebreak.
+    Taking the maxima keeps the quotas balanced, which guarantees the
+    deal never runs out of distinct classes for a client and — whenever
+    ``k*cpc >= C`` — that every class ends up with at least one holder,
+    i.e. full data coverage.  (The previous stack-based dealer could
+    hand a client the same class twice and strand stale classes when
+    ``cpc`` did not divide ``C``.)  Only when ``k*cpc < C`` do some
+    classes go unheld and their data dropped — the "each client sees
+    exactly cpc classes" semantics of the paper win over full coverage
+    in that degenerate regime.
+    """
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
-    # assign each client a set of classes, round-robin so coverage is even
+    n_classes = len(classes)
+    cpc = classes_per_client
+    if not 1 <= cpc <= n_classes:
+        raise ValueError(f"classes_per_client must be in [1, {n_classes}] "
+                         f"(distinct classes available), got {cpc}")
+    base, extra = divmod(num_clients * cpc, n_classes)
+    quota = np.full(n_classes, base, dtype=np.int64)
+    quota[rng.permutation(n_classes)[:extra]] += 1
     client_classes = []
-    pool = []
-    for c in range(num_clients):
-        if len(pool) < classes_per_client:
-            pool.extend(rng.permutation(classes).tolist())
-        client_classes.append([pool.pop() for _ in range(classes_per_client)])
-    # shards of each class split among the clients holding that class;
-    # classes no client holds (possible when k*cpc < #classes) are dropped —
-    # the "each client sees exactly cpc classes" semantics of the paper win
-    # over full data coverage in that degenerate regime.
+    for _ in range(num_clients):
+        # cpc largest remaining quotas, ties broken at random
+        pick = np.lexsort((rng.random(n_classes), -quota))[:cpc]
+        quota[pick] -= 1
+        client_classes.append(set(classes[pick].tolist()))
     holders = {c: [i for i, cc in enumerate(client_classes) if c in cc]
                for c in classes}
     out: List[List[int]] = [[] for _ in range(num_clients)]
@@ -39,8 +59,15 @@ def partition_label(seed: int, labels: np.ndarray, num_clients: int,
         if not holders[c]:
             continue
         idx = np.where(labels == c)[0]
-        idx = rng.permutation(idx)
         hs = holders[c]
+        if len(idx) < len(hs):
+            # an empty split would silently break the exactly-cpc
+            # guarantee for some holder — fail loudly instead
+            raise ValueError(
+                f"class {c} has {len(idx)} samples for {len(hs)} holders; "
+                f"reduce num_clients or classes_per_client (every holder "
+                f"needs at least one sample)")
+        idx = rng.permutation(idx)
         for h, shard in zip(hs, np.array_split(idx, len(hs))):
             out[h].extend(shard.tolist())
     return [np.sort(np.asarray(s, dtype=np.int64)) for s in out]

@@ -11,10 +11,16 @@ batched backends run each generation as O(1) jitted dispatches (one
 fill-train program with a donated master, one evaluation program
 fetched by a single device_get).  Payload codecs (``RunConfig.uplink_codec`` /
 ``downlink_codec`` -> ``repro.comm``) compress what crosses the wire
-around any strategy x backend pair.  See docs/architecture.md for the
-full matrix, the round lifecycle and the codec semantics.
+around any strategy x backend pair.  Client availability
+(``RunConfig.client_sim`` -> ``ClientSimConfig``) simulates the paper's
+real-time world — per-round availability, post-download dropout,
+stragglers against a deadline — with survivor-masked aggregation on
+every backend and a wasted-bytes CommStats ledger.  See
+docs/architecture.md for the full matrix, the round lifecycle, the
+codec semantics and the availability axis.
 """
 from repro.comm import CodecBackend, PayloadCodec, make_codec
+from repro.engine.availability import ClientSimulator, RoundSim
 from repro.engine.backends import BACKENDS, BACKEND_NAMES, \
     ExecutionBackend, LoopBackend, VmapBackend, make_backend
 from repro.engine.engine import FedEngine
@@ -22,14 +28,15 @@ from repro.engine.mesh_backend import MeshBackend
 from repro.engine.strategies import FedAvgBaseline, OfflineNas, RealTimeNas, \
     Strategy
 from repro.engine.types import AGGREGATE_BACKENDS, BYTES_PER_PARAM, \
-    CommStats, EngineResult, ERROR_COUNT_BYTES, RoundReport, RunConfig, \
-    history_dict
+    ClientSimConfig, CommStats, EngineResult, ERROR_COUNT_BYTES, \
+    RoundReport, RunConfig, history_dict
 
 __all__ = [
     "AGGREGATE_BACKENDS", "BACKENDS", "BACKEND_NAMES", "BYTES_PER_PARAM",
-    "CodecBackend", "CommStats", "ERROR_COUNT_BYTES", "EngineResult",
-    "ExecutionBackend", "FedAvgBaseline", "FedEngine", "LoopBackend",
-    "MeshBackend", "OfflineNas", "PayloadCodec", "RealTimeNas",
-    "RoundReport", "RunConfig", "Strategy", "VmapBackend", "history_dict",
-    "make_backend", "make_codec",
+    "ClientSimConfig", "ClientSimulator", "CodecBackend", "CommStats",
+    "ERROR_COUNT_BYTES", "EngineResult", "ExecutionBackend",
+    "FedAvgBaseline", "FedEngine", "LoopBackend", "MeshBackend",
+    "OfflineNas", "PayloadCodec", "RealTimeNas", "RoundReport", "RoundSim",
+    "RunConfig", "Strategy", "VmapBackend", "history_dict", "make_backend",
+    "make_codec",
 ]

@@ -1,0 +1,120 @@
+"""Real-time client availability simulation (``ClientSimConfig``).
+
+The paper's core claim is that double sampling + weight inheritance keep
+the architecture search stable while clients *come and go* — the
+defining constraint of mobile federated NAS (Zhu, Zhang & Jin 2020; Xu
+et al., DecNAS).  ``ClientSimulator`` turns that into a per-round draw
+the engine applies between participant sampling and the strategy:
+
+  * **availability** — each sampled client checks in with probability
+    ``availability`` (or its ``availability_trace`` entry).  Absent
+    clients receive nothing and cost nothing; the round's client groups
+    are formed over the available subset only, degrading gracefully all
+    the way to empty groups (``core.double_sampling``).
+  * **dropout / deadline** — each checked-in client then fails before
+    its uploads with probability ``dropout``, and independently misses
+    the round when its simulated finish time ``speed × U(0.8, 1.2)``
+    exceeds ``round_deadline`` (stragglers carry
+    ``straggler_slowdown``× speed, assigned to a fixed
+    ``straggler_fraction`` of the population per run).  Both land in
+    ``RoundSim.dropped``: downloads already pushed to them are booked on
+    the ``CommStats`` wasted ledger, and they contribute to neither
+    aggregation nor evaluation.
+
+All draws come from the simulator's own RNG stream (``ClientSimConfig
+.seed``), never from the engine's search RNG — so turning the simulation
+on cannot shift participant sampling or offspring variation, and the
+draw order is fixed on the host, which keeps the survivor sets (and
+therefore CommStats) byte-identical across execution backends.  An
+inactive config (the default) draws nothing at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.engine.types import ClientSimConfig
+
+_EMPTY_IDS = np.empty(0, dtype=np.int64)
+
+# Salt mixed into the simulator's SeedSequence so ClientSimConfig.seed=k
+# NEVER yields the same PCG64 stream as the engine's default_rng(k) —
+# with the obvious defaults (both seeds 0) the availability draws would
+# otherwise replay the search's participant/offspring uniforms verbatim,
+# silently correlating who drops with what evolves.
+_SIM_STREAM_SALT = 0x5EEDFA11
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSim:
+    """One round's availability outcome.
+
+    ``participants`` are the checked-in clients (engine sampling order
+    preserved — group sampling permutes them with the *search* RNG, as
+    ever).  ``survivors`` is ``None`` when the simulation is inactive
+    (the exact legacy path); otherwise the frozenset of client ids that
+    complete their uploads.  ``dropped`` lists the participants that
+    downloaded but never upload this round."""
+    participants: np.ndarray
+    survivors: Optional[frozenset]
+    dropped: np.ndarray
+    n_sampled: int
+
+    @property
+    def active(self) -> bool:
+        return self.survivors is not None
+
+    @property
+    def n_dropped(self) -> int:
+        return len(self.dropped)
+
+    @property
+    def n_survivors(self) -> int:
+        """Surviving participant count (all of them when inactive)."""
+        return (len(self.participants) if self.survivors is None
+                else len(self.survivors))
+
+    @classmethod
+    def inactive(cls, participants: np.ndarray) -> "RoundSim":
+        participants = np.asarray(participants)
+        return cls(participants, None, _EMPTY_IDS, len(participants))
+
+
+class ClientSimulator:
+    """Per-run simulator state: the sim RNG stream and the fixed
+    straggler speed assignment.  Built fresh by every ``FedEngine.run``
+    so runs are re-entrant and seed-deterministic."""
+
+    def __init__(self, cfg: ClientSimConfig, num_clients: int):
+        self.cfg = cfg
+        self.active = cfg.is_active
+        trace = cfg.availability_trace
+        if trace is not None and len(trace) != num_clients:
+            raise ValueError(
+                f"availability_trace has {len(trace)} entries for "
+                f"{num_clients} clients")
+        self.rng = np.random.default_rng((_SIM_STREAM_SALT, cfg.seed))
+        self.avail_p = (np.asarray(trace, dtype=float) if trace is not None
+                        else np.full(num_clients, cfg.availability))
+        self.speed = np.ones(num_clients)
+        if self.active and cfg.straggler_fraction > 0.0:
+            k = int(round(cfg.straggler_fraction * num_clients))
+            slow = self.rng.permutation(num_clients)[:k]
+            self.speed[slow] = cfg.straggler_slowdown
+
+    def draw_round(self, sampled: np.ndarray) -> RoundSim:
+        """Draw this round's availability outcome for the sampled
+        participants (order-preserving filter)."""
+        sampled = np.asarray(sampled)
+        if not self.active:
+            return RoundSim.inactive(sampled)
+        cfg, rng = self.cfg, self.rng
+        avail = sampled[rng.random(len(sampled)) < self.avail_p[sampled]]
+        drop = rng.random(len(avail)) < cfg.dropout
+        if cfg.round_deadline is not None:
+            t = self.speed[avail] * rng.uniform(0.8, 1.2, size=len(avail))
+            drop |= t > cfg.round_deadline
+        survivors = frozenset(int(c) for c in avail[~drop])
+        return RoundSim(avail, survivors, avail[drop], len(sampled))

@@ -50,6 +50,22 @@ Payload codecs never appear in this module: when
 these train/eval entry points uniformly — so the dispatch math here (and
 in ``mesh_backend``) stays codec-free and every backend sees identical
 compressed inputs.
+
+Client availability (``ClientSimConfig``) reaches every entry point as
+an optional ``survivors`` set — the clients whose uploads actually
+arrive this round.  The batched backends keep their program shapes
+STATIC under dropout: dropped clients stay in the stacked arrays and are
+masked out instead — for training their aggregation weight is zeroed
+host-side (exactly the weight-0 padding-row mechanism, so
+``fill_bucket_partial`` / ``fedavg_population_bucket`` need no new
+arguments and a zeroed row contributes *exactly* nothing), with the
+normalization total taken over survivors only; for evaluation an int32
+``alive`` mask rides into ``eval_bucket_counts`` and multiplies the
+per-client wrong counts (integer math — masking is exact).  The fused
+dispatch count is therefore unchanged at any dropout rate.  The loop
+backend simply skips dead clients, which the weight-0/masked paths
+reproduce exactly.  ``survivors=None`` (the default) is the legacy
+fully-synchronous path.
 """
 from __future__ import annotations
 
@@ -144,13 +160,15 @@ def train_bucket_uploads(upd, master, keys, xb, yb, lr):
     return jax.lax.scan(per_group, None, (keys, xb, yb))[1]
 
 
-def _tiled_count(ev, params, key, xb, yb, tile):
+def _tiled_count(ev, params, key, xb, yb, alive, tile):
     """Wrong count of one (params, key) pair over a stacked test bucket,
     with the client axis consumed ``tile`` shards per scan step through
     an inner ``vmap`` (forward-only compute is cheap enough for moderate
     batching to pay — the same trade ``RunConfig.vmap_eval_tile`` makes
-    on the non-fused path).  Counts are integers, so any tiling yields
-    bitwise-identical totals."""
+    on the non-fused path).  ``alive`` is the (S,) int32 survivor mask
+    multiplying each client's count (1s when the availability simulation
+    is off).  Counts are integers, so tiling and masking are both
+    exact."""
     m = xb.shape[0]
     tile = max(1, min(tile, m))
     full = (m // tile) * tile
@@ -159,38 +177,41 @@ def _tiled_count(ev, params, key, xb, yb, tile):
     if full:
         fx = xb[:full].reshape((full // tile, tile) + xb.shape[1:])
         fy = yb[:full].reshape((full // tile, tile) + yb.shape[1:])
+        fa = alive[:full].reshape((full // tile, tile))
 
         def tiles(a, c):
-            return a + jnp.sum(tile_ev(params, key, c[0], c[1])), None
+            return a + jnp.sum(c[2] * tile_ev(params, key, c[0], c[1])), None
 
-        acc = jax.lax.scan(tiles, acc, (fx, fy))[0]
+        acc = jax.lax.scan(tiles, acc, (fx, fy, fa))[0]
     if m > full:
         def tail(a, c):
-            return a + ev(params, key, c[0], c[1]), None
+            return a + c[2] * ev(params, key, c[0], c[1]), None
 
-        acc = jax.lax.scan(tail, acc, (xb[full:], yb[full:]))[0]
+        acc = jax.lax.scan(tail, acc,
+                           (xb[full:], yb[full:], alive[full:]))[0]
     return acc
 
 
-def eval_bucket_counts(ev, params, keys, xb, yb, tile=1):
+def eval_bucket_counts(ev, params, keys, xb, yb, alive, tile=1):
     """Wrong counts of every key on one shared master over one stacked
     test bucket: ``keys`` (K, num_blocks) -> (K,) int32 on device.  The
     key axis is consumed by ``lax.scan`` (scalar keys keep ``lax.switch``
-    a real branch); the client axis is tiled (``_tiled_count``)."""
+    a real branch); the client axis is tiled (``_tiled_count``) and
+    masked by the (S,) int32 ``alive`` survivor vector."""
 
     def per_key(_, key):
-        return None, _tiled_count(ev, params, key, xb, yb, tile)
+        return None, _tiled_count(ev, params, key, xb, yb, alive, tile)
 
     return jax.lax.scan(per_key, None, keys)[1]
 
 
-def eval_paired_bucket_counts(ev, ps, keys, xb, yb, tile=1):
+def eval_paired_bucket_counts(ev, ps, keys, xb, yb, alive, tile=1):
     """``eval_bucket_counts`` for (params, key) pairs: every ``ps`` leaf
     carries a leading (K,) axis aligned with ``keys``."""
 
     def per_pair(_, inp):
         p, key = inp
-        return None, _tiled_count(ev, p, key, xb, yb, tile)
+        return None, _tiled_count(ev, p, key, xb, yb, alive, tile)
 
     return jax.lax.scan(per_pair, None, (ps, keys))[1]
 
@@ -242,24 +263,31 @@ class ExecutionBackend(Protocol):
     scaling claims in docs/architecture.md are asserted against it).
     All ``keys`` are (num_blocks,) int32 choice keys; ``client_ids`` /
     ``groups`` index into the backend's client list; ``lr`` is the
-    round's learning rate.  Returned parameters are full pytrees;
+    round's learning rate.  ``survivors`` is ``None`` (every client
+    completes — the legacy path) or the set of client ids whose uploads
+    arrive this round (``ClientSimConfig`` dropout): non-survivors must
+    contribute nothing to aggregation or error counts, with weights
+    renormalized over survivors.  Returned parameters are full pytrees;
     ``eval_*`` return (len(keys),) float64 weighted test-error rates in
-    [0, 1]."""
+    [0, 1] over the surviving participants."""
 
     name: str
     dispatches: int
 
     def train_fill(self, master: Params, keys: Sequence[np.ndarray],
-                   groups: Sequence[np.ndarray], lr: float) -> Params:
+                   groups: Sequence[np.ndarray], lr: float,
+                   survivors=None) -> Params:
         """Train keys[g] on client group g from the shared master and
-        fill-aggregate the uploads into the new master (Algorithm 3/4).
-        Callers must treat ``master`` as consumed — fused backends may
-        donate its buffers to the returned update
-        (``master_donation_safe``)."""
+        fill-aggregate the surviving uploads into the new master
+        (Algorithm 3/4); groups may be empty (their individuals'
+        blocks are filled from the previous master).  Callers must
+        treat ``master`` as consumed — fused backends may donate its
+        buffers to the returned update (``master_donation_safe``)."""
         ...
 
     def train_fedavg(self, params: Params, key: np.ndarray,
-                     client_ids: np.ndarray, lr: float) -> Params:
+                     client_ids: np.ndarray, lr: float,
+                     survivors=None) -> Params:
         """One FedAvg round of ``key``'s standalone model over every
         listed client (Algorithm 1)."""
         ...
@@ -267,19 +295,19 @@ class ExecutionBackend(Protocol):
     def train_fedavg_population(self, params_list: Sequence[Params],
                                 keys: Sequence[np.ndarray],
                                 client_ids: np.ndarray,
-                                lr: float) -> List[Params]:
+                                lr: float, survivors=None) -> List[Params]:
         """``train_fedavg`` for each (params, key) pair — every client
         trains every individual (the offline baseline)."""
         ...
 
     def eval_shared(self, params: Params, keys: Sequence[np.ndarray],
-                    client_ids: np.ndarray) -> np.ndarray:
+                    client_ids: np.ndarray, survivors=None) -> np.ndarray:
         """Weighted test-error rate of every key on one shared master."""
         ...
 
     def eval_paired(self, params_list: Sequence[Params],
                     keys: Sequence[np.ndarray],
-                    client_ids: np.ndarray) -> np.ndarray:
+                    client_ids: np.ndarray, survivors=None) -> np.ndarray:
         """Weighted test-error rate of every (params, key) pair."""
         ...
 
@@ -305,11 +333,17 @@ class LoopBackend:
         self.evaluate = make_evaluator(api)
         self.dispatches = 0
 
-    def train_fill(self, master, keys, groups, lr):
+    @staticmethod
+    def _alive(survivors, cid) -> bool:
+        return survivors is None or int(cid) in survivors
+
+    def train_fill(self, master, keys, groups, lr, survivors=None):
         uploads = []
         for key, group in zip(keys, groups):
             jkey = np.asarray(key, np.int32)
             for cid in group:
+                if not self._alive(survivors, cid):
+                    continue          # dropped: its upload never arrives
                 c = self.clients[int(cid)]
                 xb, yb = c.train
                 p_k = self.update(master, jkey, xb, yb, lr)
@@ -322,23 +356,31 @@ class LoopBackend:
         return fill_aggregate(master, uploads,
                               backend=self.cfg.aggregate_backend)
 
-    def train_fedavg(self, params, key, client_ids, lr):
+    def train_fedavg(self, params, key, client_ids, lr, survivors=None):
         jkey = np.asarray(key, np.int32)
         uploads = []
         for cid in client_ids:
+            if not self._alive(survivors, cid):
+                continue
             c = self.clients[int(cid)]
             xb, yb = c.train
             uploads.append((self.update(params, jkey, xb, yb, lr), c.weight))
             self.dispatches += 1
+        if not uploads:
+            return params
         self.dispatches += 1
         return fedavg(uploads)
 
-    def train_fedavg_population(self, params_list, keys, client_ids, lr):
-        return [self.train_fedavg(p, k, client_ids, lr)
+    def train_fedavg_population(self, params_list, keys, client_ids, lr,
+                                survivors=None):
+        return [self.train_fedavg(p, k, client_ids, lr, survivors=survivors)
                 for p, k in zip(params_list, keys)]
 
-    def eval_shared(self, params, keys, client_ids):
-        part = [self.clients[int(i)] for i in client_ids]
+    def eval_shared(self, params, keys, client_ids, survivors=None):
+        part = [self.clients[int(i)] for i in client_ids
+                if self._alive(survivors, i)]
+        if not part:                   # nobody evaluated: pessimistic 1.0
+            return np.ones(len(keys))
         errs = []
         for k in keys:
             errs.append(weighted_test_error(
@@ -346,8 +388,11 @@ class LoopBackend:
             self.dispatches += len(part)
         return np.asarray(errs)
 
-    def eval_paired(self, params_list, keys, client_ids):
-        part = [self.clients[int(i)] for i in client_ids]
+    def eval_paired(self, params_list, keys, client_ids, survivors=None):
+        part = [self.clients[int(i)] for i in client_ids
+                if self._alive(survivors, i)]
+        if not part:                   # nobody evaluated: pessimistic 1.0
+            return np.ones(len(keys))
         errs = []
         for p, k in zip(params_list, keys):
             errs.append(weighted_test_error(
@@ -406,15 +451,30 @@ class StackedClientBase:
             self._train_store_cache = store
         return self._train_store_cache
 
-    def _group_train_gather(self, client_ids):
+    def _client_weight(self, cid, survivors) -> float:
+        """A client's aggregation weight this round: 0 for dropped
+        clients, so they stay in the static stacked shapes but
+        contribute exactly nothing (the weight-0 padding mechanism)."""
+        cid = int(cid)
+        if survivors is not None and cid not in survivors:
+            return 0.0
+        return self.clients[cid].weight
+
+    def _survivor_total(self, client_ids, survivors) -> float:
+        """Sum of surviving weights — the renormalization total."""
+        return float(sum(self._client_weight(c, survivors)
+                         for c in client_ids))
+
+    def _group_train_gather(self, client_ids, survivors=None):
         """Yield (xb, yb, weights, num_shards) per shape bucket for one
-        client group, gathered from the resident store."""
+        client group, gathered from the resident store (dropped clients
+        at weight 0)."""
         for pos, xb, yb in self._train_store():
             sel = [int(i) for i in client_ids if int(i) in pos]
             if not sel:
                 continue
             rows = jnp.asarray([pos[i] for i in sel], jnp.int32)
-            w = np.asarray([self.clients[i].weight for i in sel],
+            w = np.asarray([self._client_weight(i, survivors) for i in sel],
                            np.float32)
             yield xb[rows], yb[rows], w, len(sel)
 
@@ -448,25 +508,49 @@ class StackedClientBase:
         return jnp.asarray(arr)
 
     @staticmethod
-    def _rates(counts, batches, n_keys):
+    def _alive_masks(batches, survivors):
+        """Per test bucket, the (S,) int32 survivor mask the masked eval
+        bodies consume (all-ones when ``survivors`` is None)."""
+        if survivors is None:
+            return [np.ones(cb.num_shards, np.int32) for cb in batches]
+        return [np.asarray([1 if int(c) in survivors else 0
+                            for c in cb.client_ids], np.int32)
+                for cb in batches]
+
+    @staticmethod
+    def _alive_total(batches, masks) -> int:
+        """Pooled test-sample count over surviving clients — the error
+        denominator matching the masked counts."""
+        return int(sum(int(m.sum()) * cb.samples_per_shard
+                       for cb, m in zip(batches, masks)))
+
+    @staticmethod
+    def _rates(counts, total, n_keys):
         """One ``jax.device_get`` per generation: the on-device
         wrong-count vector -> pooled error rates of the first ``n_keys``
-        keys (the rest is mesh padding)."""
-        total = sum(cb.num_shards * cb.samples_per_shard for cb in batches)
+        keys (the rest is mesh padding) over ``total`` surviving test
+        samples.  ``total == 0`` (nobody evaluated) is pessimistic 1.0,
+        never a perfect score — the same convention the strategies and
+        the loop backend use."""
+        if total == 0:
+            return np.ones(n_keys)
         wrong = np.asarray(jax.device_get(counts), np.int64)
-        return wrong[:n_keys] / max(total, 1)
+        return wrong[:n_keys] / total
 
     def _group_bucket_arrays(self, keys, groups, total, pad_groups=0,
-                             place=jnp.asarray):
+                             place=jnp.asarray, survivors=None):
         """Per shape bucket of the resident train store, the group-major
         stacked arrays the fused / sharded fill programs consume:
         (keys (Gp, nb) int32, xb (Gp, S, nbat, B, ...), yb, w (Gp, S)
         float32 normalized by ``total``), with the G groups padded to
         Gp = G + ``pad_groups`` and ragged groups padded to S clients —
         all padding at weight 0, so it contributes exactly nothing.
-        ``place`` puts each array on device (the mesh backend shards the
-        leading axis here); the keys array is placed once and shared by
-        every bucket."""
+        Dropped clients (``survivors``) ride the same mechanism: they
+        keep their row — the stacked shapes stay static under any
+        dropout rate — but at weight 0 and with ``total`` summed over
+        survivors only.  ``place`` puts each array on device (the mesh
+        backend shards the leading axis here); the keys array is placed
+        once and shared by every bucket."""
         out = []
         g_n = len(groups)
         keys_arr = np.zeros((g_n + pad_groups, self.api.num_blocks),
@@ -474,7 +558,7 @@ class StackedClientBase:
         keys_arr[:g_n] = np.stack([np.asarray(k, np.int32) for k in keys])
         karr = place(keys_arr)       # one transfer, shared by buckets
         for pos, xb_all, yb_all in self._train_store():
-            entries = [[(pos[int(c)], self.clients[int(c)].weight)
+            entries = [[(pos[int(c)], self._client_weight(c, survivors))
                         for c in g if int(c) in pos] for g in groups]
             s_max = max((len(e) for e in entries), default=0)
             if s_max == 0:
@@ -494,10 +578,10 @@ class StackedClientBase:
                         place(w)))
         return out
 
-    def train_fedavg(self, params, key, client_ids, lr):
+    def train_fedavg(self, params, key, client_ids, lr, survivors=None):
         """Algorithm 1 for one model == the population path at P = 1."""
-        return self.train_fedavg_population([params], [key],
-                                            client_ids, lr)[0]
+        return self.train_fedavg_population([params], [key], client_ids,
+                                            lr, survivors=survivors)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -558,15 +642,15 @@ class VmapBackend(StackedClientBase):
 
         def fused_eval_shared(params, keys, shards):
             return accumulate_parts(
-                eval_bucket_counts(ev, params, keys, xb, yb,
+                eval_bucket_counts(ev, params, keys, xb, yb, alive,
                                    tile=cfg.vmap_eval_tile)
-                for xb, yb in shards)
+                for xb, yb, alive in shards)
 
         def fused_eval_paired(ps, keys, shards):
             return accumulate_parts(
-                eval_paired_bucket_counts(ev, ps, keys, xb, yb,
+                eval_paired_bucket_counts(ev, ps, keys, xb, yb, alive,
                                           tile=cfg.vmap_eval_tile)
-                for xb, yb in shards)
+                for xb, yb, alive in shards)
 
         def fused_fedavg(ps, keys, buckets, lr):
             return cast_like(accumulate_parts(
@@ -596,15 +680,17 @@ class VmapBackend(StackedClientBase):
 
             return jax.tree.map(avg, outs)
 
-        def eval_tiles(params, key, xb, yb):
-            # xb/yb: (T, tile, nb, B, ...) -> total error count
+        def eval_tiles(params, key, xb, yb, alive):
+            # xb/yb: (T, tile, nb, B, ...), alive (T, tile) int32 survivor
+            # mask -> total error count over surviving clients
             tile_ev = jax.vmap(ev, in_axes=(None, None, 0, 0))
 
             def one(acc, shard):
-                return acc + jnp.sum(tile_ev(params, key,
-                                             shard[0], shard[1])), None
+                return acc + jnp.sum(shard[2] * tile_ev(params, key,
+                                                        shard[0],
+                                                        shard[1])), None
             return jax.lax.scan(one, jnp.zeros((), jnp.int32),
-                                (xb, yb))[0]
+                                (xb, yb, alive))[0]
 
         self._scan_update = jax.jit(scan_update)
         self._scan_update_avg = jax.jit(scan_update_avg)
@@ -612,20 +698,25 @@ class VmapBackend(StackedClientBase):
 
     # -- protocol -----------------------------------------------------------
 
-    def train_fill(self, master, keys, groups, lr):
+    def train_fill(self, master, keys, groups, lr, survivors=None):
         if self.cfg.fused:
-            return self._train_fill_fused(master, keys, groups, lr)
+            return self._train_fill_fused(master, keys, groups, lr,
+                                          survivors)
         chunks = []
         for key, group in zip(keys, groups):
             if len(group) == 0:
                 continue
+            if survivors is not None and \
+                    not any(int(c) in survivors for c in group):
+                continue    # fully-dropped group: its weight-0 rows would
+                # contribute exactly nothing — skip the training dispatch
             jkey = np.asarray(key, np.int32)
-            for xb, yb, w, n in self._group_train_gather(group):
+            for xb, yb, w, n in self._group_train_gather(group, survivors):
                 out = self._scan_update(master, jkey, xb, yb, lr)
                 self.dispatches += 1
                 chunks.append((out, np.tile(jkey, (n, 1)), w))
-        if not chunks:
-            return master
+        if not chunks or not any(np.any(w) for _, _, w in chunks):
+            return master              # nobody survived: master untouched
         # per-group stacked uploads feed the batched fill directly (one
         # dispatch per chunk; concatenating first would duplicate every
         # upload on device just to save the partial-sum adds)
@@ -635,13 +726,14 @@ class VmapBackend(StackedClientBase):
         self.dispatches += len(chunks)
         return master
 
-    def _train_fill_fused(self, master, keys, groups, lr):
+    def _train_fill_fused(self, master, keys, groups, lr, survivors=None):
         groups = [np.asarray(g) for g in groups]
-        total = float(sum(self.clients[int(c)].weight
-                          for g in groups for c in g))
+        total = self._survivor_total([c for g in groups for c in g],
+                                     survivors)
         if total == 0.0:
             return master
-        buckets = tuple(self._group_bucket_arrays(keys, groups, total))
+        buckets = tuple(self._group_bucket_arrays(keys, groups, total,
+                                                  survivors=survivors))
         if not buckets:
             return master
         lr = jnp.float32(lr)
@@ -677,10 +769,13 @@ class VmapBackend(StackedClientBase):
             acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
         return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, params)
 
-    def train_fedavg_population(self, params_list, keys, client_ids, lr):
+    def train_fedavg_population(self, params_list, keys, client_ids, lr,
+                                survivors=None):
         # gather the participants' train shards once for every individual
-        batches = list(self._group_train_gather(client_ids))
-        total = float(sum(self.clients[int(i)].weight for i in client_ids))
+        batches = list(self._group_train_gather(client_ids, survivors))
+        total = self._survivor_total(client_ids, survivors)
+        if total == 0.0:               # nobody survived: models untouched
+            return list(params_list)
         if self.cfg.fused:
             if not params_list:
                 return []
@@ -697,9 +792,11 @@ class VmapBackend(StackedClientBase):
                                           batches, total, lr)
                 for p, k in zip(params_list, keys)]
 
-    def _eval_one(self, params, jkey, batches):
-        wrong = total = 0
-        for batch in batches:
+    def _eval_one(self, params, jkey, batches, masks, total):
+        if total == 0:
+            return 1.0                 # nobody evaluated: pessimistic
+        wrong = 0
+        for batch, alive in zip(batches, masks):
             m = batch.num_shards
             tile = max(1, min(self.cfg.vmap_eval_tile, m))
             full = (m // tile) * tile
@@ -709,40 +806,48 @@ class VmapBackend(StackedClientBase):
                     params, jkey,
                     batch.xb[:full].reshape((full // tile, tile) + tail),
                     batch.yb[:full].reshape((full // tile, tile)
-                                            + batch.yb.shape[1:])))
+                                            + batch.yb.shape[1:]),
+                    alive[:full].reshape((full // tile, tile))))
                 self.dispatches += 1
             if m > full:
                 wrong += int(self._eval_tiles(params, jkey,
                                               batch.xb[None, full:],
-                                              batch.yb[None, full:]))
+                                              batch.yb[None, full:],
+                                              alive[None, full:]))
                 self.dispatches += 1
-            total += m * batch.samples_per_shard
-        return wrong / max(total, 1)
+        return wrong / total
 
-    def eval_shared(self, params, keys, client_ids):
+    def eval_shared(self, params, keys, client_ids, survivors=None):
         batches = self._test_batches(client_ids)
+        masks = self._alive_masks(batches, survivors)
+        total = self._alive_total(batches, masks)
         if self.cfg.fused:
             karr = jnp.asarray(np.stack([np.asarray(k, np.int32)
                                          for k in keys]))
             counts = self._fused_eval_shared(
-                params, karr, tuple((cb.xb, cb.yb) for cb in batches))
+                params, karr, tuple((cb.xb, cb.yb, m)
+                                    for cb, m in zip(batches, masks)))
             self.dispatches += 1
-            return self._rates(counts, batches, len(keys))
+            return self._rates(counts, total, len(keys))
         return np.asarray([self._eval_one(params, np.asarray(k, np.int32),
-                                          batches) for k in keys])
+                                          batches, masks, total)
+                           for k in keys])
 
-    def eval_paired(self, params_list, keys, client_ids):
+    def eval_paired(self, params_list, keys, client_ids, survivors=None):
         batches = self._test_batches(client_ids)
+        masks = self._alive_masks(batches, survivors)
+        total = self._alive_total(batches, masks)
         if self.cfg.fused:
             ps = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
             karr = jnp.asarray(np.stack([np.asarray(k, np.int32)
                                          for k in keys]))
             counts = self._fused_eval_paired(
-                ps, karr, tuple((cb.xb, cb.yb) for cb in batches))
+                ps, karr, tuple((cb.xb, cb.yb, m)
+                                for cb, m in zip(batches, masks)))
             self.dispatches += 1
-            return self._rates(counts, batches, len(keys))
+            return self._rates(counts, total, len(keys))
         return np.asarray([self._eval_one(p, np.asarray(k, np.int32),
-                                          batches)
+                                          batches, masks, total)
                            for p, k in zip(params_list, keys)])
 
 

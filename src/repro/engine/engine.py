@@ -23,6 +23,7 @@ from repro.comm import CodecBackend, make_codec
 from repro.core.double_sampling import sample_participants
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientDataset
+from repro.engine.availability import ClientSimulator, RoundSim
 from repro.engine.backends import ExecutionBackend, make_backend
 from repro.engine.strategies import RealTimeNas, Strategy
 from repro.engine.types import CommStats, EngineResult, RoundReport, \
@@ -76,6 +77,11 @@ class FedEngine:
         self.rng = np.random.default_rng(self.cfg.seed)
         self.stats = CommStats()
         self.reports: list[RoundReport] = []
+        # client-availability simulation (repro.engine.availability) —
+        # constructed here so a bad availability_trace fails at engine
+        # build time, and rebuilt per run() for re-entrancy
+        self.sim = ClientSimulator(self.cfg.client_sim, len(self.clients))
+        self.round_ctx: Optional[RoundSim] = None
 
     def run(self, callback: Optional[Callable[[int, RoundReport], None]]
             = None) -> EngineResult:
@@ -94,16 +100,27 @@ class FedEngine:
         reset = getattr(self.backend, "reset", None)
         if reset is not None:        # CodecBackend: drop EF residuals
             reset()
+        self.sim = ClientSimulator(cfg.client_sim, len(self.clients))
         self.strategy.setup(self)
         t0 = t_prev = time.time()
         for gen in range(1, cfg.generations + 1):
             lr = float(round_decay(cfg.lr0, cfg.lr_decay, gen - 1))
-            participants = sample_participants(self.rng, len(self.clients),
-                                               cfg.participation)
-            report = self.strategy.round(self, gen, participants, lr)
+            sampled = sample_participants(self.rng, len(self.clients),
+                                          cfg.participation)
+            # availability / dropout draw (sim RNG only — the search RNG
+            # stream above is untouched by the simulation)
+            ctx = self.sim.draw_round(sampled)
+            self.round_ctx = ctx
+            report = self.strategy.round(self, gen, ctx.participants, lr)
             report.down_gb = self.stats.down_bytes / 1e9
             report.up_gb = self.stats.up_bytes / 1e9
             report.train_passes = self.stats.client_train_passes
+            if ctx.active:
+                report.n_sampled = ctx.n_sampled
+                report.n_available = len(ctx.participants)
+                report.n_dropped = ctx.n_dropped
+                report.n_survivors = ctx.n_survivors
+                report.wasted_down_gb = self.stats.wasted_down_bytes / 1e9
             now = time.time()
             report.wall_s = now - t0        # cumulative since run() start
             report.round_s = now - t_prev   # this round's delta
@@ -111,5 +128,8 @@ class FedEngine:
             self.reports.append(report)
             if callback:
                 callback(gen, report)
+        # a stale RoundSim must not leak into strategies driven manually
+        # on this engine afterwards (they fall back to an inactive ctx)
+        self.round_ctx = None
         return EngineResult(reports=self.reports, stats=self.stats,
                             extras=self.strategy.extras(self))

@@ -48,7 +48,11 @@ Determinism / parity: padding rows carry weight 0 and weights are
 normalized globally, so results match ``VmapBackend`` within fp32
 reduction-order noise (<= 1e-5 on the smoke supernet; asserted by
 ``tests/test_engine.py``) and CommStats — which the strategies account,
-independent of execution — match exactly.
+independent of execution — match exactly.  Client dropout
+(``ClientSimConfig``) rides the same weight-0 mechanism for training
+and an int32 ``alive`` mask for the eval counts, so the sharded shapes
+— and the O(1) fused dispatch count — are unchanged at any dropout
+rate (see ``repro.engine.backends``).
 
 Run multi-device on a plain CPU host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
@@ -160,23 +164,26 @@ class MeshBackend(StackedClientBase):
         self._fedavg_partial = jax.jit(fedavg_sm)
 
         # -- sharded-key evaluation over the replicated test stack ----------
-        def eval_shared_body(params, keys, xb, yb):
-            return eval_bucket_counts(ev, params, keys, xb, yb,
+        # (``alive`` is the replicated int32 survivor mask — dropped
+        # clients' counts are zeroed inside the program, so the sharded
+        # shapes stay static under any dropout rate)
+        def eval_shared_body(params, keys, xb, yb, alive):
+            return eval_bucket_counts(ev, params, keys, xb, yb, alive,
                                       tile=cfg.vmap_eval_tile)
 
         eval_shared_sm = shard_map(
             eval_shared_body, mesh=self.mesh,
-            in_specs=(rep, pop, rep, rep),
+            in_specs=(rep, pop, rep, rep, rep),
             out_specs=pop, check_rep=False)
         self._eval_shared_counts = jax.jit(eval_shared_sm)
 
-        def eval_paired_body(ps, keys, xb, yb):
-            return eval_paired_bucket_counts(ev, ps, keys, xb, yb,
+        def eval_paired_body(ps, keys, xb, yb, alive):
+            return eval_paired_bucket_counts(ev, ps, keys, xb, yb, alive,
                                              tile=cfg.vmap_eval_tile)
 
         eval_paired_sm = shard_map(
             eval_paired_body, mesh=self.mesh,
-            in_specs=(pop, pop, rep, rep),
+            in_specs=(pop, pop, rep, rep, rep),
             out_specs=pop, check_rep=False)
         self._eval_paired_counts = jax.jit(eval_paired_sm)
 
@@ -192,12 +199,14 @@ class MeshBackend(StackedClientBase):
                 for keys, xb, yb, w in buckets), master)
 
         def fused_eval_shared(params, keys, shards):
-            return accumulate_parts(eval_shared_sm(params, keys, xb, yb)
-                                    for xb, yb in shards)
+            return accumulate_parts(
+                eval_shared_sm(params, keys, xb, yb, alive)
+                for xb, yb, alive in shards)
 
         def fused_eval_paired(ps, keys, shards):
-            return accumulate_parts(eval_paired_sm(ps, keys, xb, yb)
-                                    for xb, yb in shards)
+            return accumulate_parts(
+                eval_paired_sm(ps, keys, xb, yb, alive)
+                for xb, yb, alive in shards)
 
         def fused_fedavg(ps, keys, buckets, lr):
             return cast_like(accumulate_parts(
@@ -235,21 +244,24 @@ class MeshBackend(StackedClientBase):
     # -- train_fill ----------------------------------------------------------
 
     def _group_bucket_arrays(self, keys, groups, total, pad_groups=None,
-                             place=None):
+                             place=None, survivors=None):
         """The base builder with the group axis padded to a mesh multiple
-        and every array placed population-sharded (weight-0 padding)."""
+        and every array placed population-sharded (weight-0 padding,
+        which also carries the dropped-client survivor masking)."""
         g_pad = self._pad(len(groups)) if pad_groups is None else pad_groups
         return super()._group_bucket_arrays(
             keys, groups, total, pad_groups=g_pad,
-            place=self._put_pop if place is None else place)
+            place=self._put_pop if place is None else place,
+            survivors=survivors)
 
-    def train_fill(self, master, keys, groups, lr):
+    def train_fill(self, master, keys, groups, lr, survivors=None):
         groups = [np.asarray(g) for g in groups]
-        total = float(sum(self.clients[int(c)].weight
-                          for g in groups for c in g))
+        total = self._survivor_total([c for g in groups for c in g],
+                                     survivors)
         if total == 0.0:
             return master
-        buckets = self._group_bucket_arrays(keys, groups, total)
+        buckets = self._group_bucket_arrays(keys, groups, total,
+                                            survivors=survivors)
         if not buckets:
             return master
         if self.cfg.aggregate_backend == "pallas":
@@ -290,10 +302,13 @@ class MeshBackend(StackedClientBase):
 
     # -- FedAvg paths (train_fedavg delegates via StackedClientBase) ---------
 
-    def train_fedavg_population(self, params_list, keys, client_ids, lr):
+    def train_fedavg_population(self, params_list, keys, client_ids, lr,
+                                survivors=None):
         if not params_list:
             return []
-        total = float(sum(self.clients[int(i)].weight for i in client_ids))
+        total = self._survivor_total(client_ids, survivors)
+        if total == 0.0:               # nobody survived: models untouched
+            return list(params_list)
         n = len(params_list)
         pad = self._pad(n)
         plist = list(params_list) + [params_list[-1]] * pad
@@ -306,12 +321,12 @@ class MeshBackend(StackedClientBase):
         if self.cfg.fused:
             buckets = tuple((xb, yb, jnp.asarray(w / total))
                             for xb, yb, w, _ in
-                            self._group_train_gather(client_ids))
+                            self._group_train_gather(client_ids, survivors))
             out = self._fused_fedavg(stacked, keys_arr, buckets, lr)
             self.dispatches += 1
             return [jax.tree.map(lambda x: x[i], out) for i in range(n)]
         acc = None
-        for xb, yb, w, _ in self._group_train_gather(client_ids):
+        for xb, yb, w, _ in self._group_train_gather(client_ids, survivors):
             part = self._fedavg_partial(stacked, keys_arr, xb, yb,
                                         jnp.asarray(w / total), lr)
             self.dispatches += 1
@@ -326,27 +341,35 @@ class MeshBackend(StackedClientBase):
         klist = klist + [klist[-1]] * self._pad(len(klist))
         return self._put_pop(np.stack(klist))
 
-    def eval_shared(self, params, keys, client_ids):
+    def eval_shared(self, params, keys, client_ids, survivors=None):
         batches = self._test_batches(client_ids)
+        masks = self._alive_masks(batches, survivors)
+        total = self._alive_total(batches, masks)
+        if total == 0:                 # nobody evaluated: pessimistic
+            return np.ones(len(keys))
         karr = self._padded_keys(keys)
         if self.cfg.fused:
             counts = self._fused_eval_shared(
-                params, karr, tuple((cb.xb, cb.yb) for cb in batches))
+                params, karr, tuple((cb.xb, cb.yb, m)
+                                    for cb, m in zip(batches, masks)))
             self.dispatches += 1
-            return self._rates(counts, batches, len(keys))
+            return self._rates(counts, total, len(keys))
         wrong = np.zeros(karr.shape[0], np.int64)
-        total = 0
-        for cb in batches:
+        for cb, m in zip(batches, masks):
             counts = self._eval_shared_counts(params, karr,
                                               jnp.asarray(cb.xb),
-                                              jnp.asarray(cb.yb))
+                                              jnp.asarray(cb.yb),
+                                              jnp.asarray(m))
             self.dispatches += 1
             wrong += np.asarray(counts, np.int64)
-            total += cb.num_shards * cb.samples_per_shard
-        return wrong[:len(keys)] / max(total, 1)
+        return wrong[:len(keys)] / total
 
-    def eval_paired(self, params_list, keys, client_ids):
+    def eval_paired(self, params_list, keys, client_ids, survivors=None):
         batches = self._test_batches(client_ids)
+        masks = self._alive_masks(batches, survivors)
+        total = self._alive_total(batches, masks)
+        if total == 0:                 # nobody evaluated: pessimistic
+            return np.ones(len(keys))
         pad = self._pad(len(params_list))
         plist = list(params_list) + [params_list[-1]] * pad
         stacked = self._put_pop_tree(
@@ -354,19 +377,19 @@ class MeshBackend(StackedClientBase):
         karr = self._padded_keys(keys)
         if self.cfg.fused:
             counts = self._fused_eval_paired(
-                stacked, karr, tuple((cb.xb, cb.yb) for cb in batches))
+                stacked, karr, tuple((cb.xb, cb.yb, m)
+                                     for cb, m in zip(batches, masks)))
             self.dispatches += 1
-            return self._rates(counts, batches, len(keys))
+            return self._rates(counts, total, len(keys))
         wrong = np.zeros(karr.shape[0], np.int64)
-        total = 0
-        for cb in batches:
+        for cb, m in zip(batches, masks):
             counts = self._eval_paired_counts(stacked, karr,
                                               jnp.asarray(cb.xb),
-                                              jnp.asarray(cb.yb))
+                                              jnp.asarray(cb.yb),
+                                              jnp.asarray(m))
             self.dispatches += 1
             wrong += np.asarray(counts, np.int64)
-            total += cb.num_shards * cb.samples_per_shard
-        return wrong[:len(keys)] / max(total, 1)
+        return wrong[:len(keys)] / total
 
 
 from repro.engine import backends as _backends  # noqa: E402

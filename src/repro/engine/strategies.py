@@ -17,7 +17,7 @@ evaluation are dispatched.  A strategy only sequences the round:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Protocol
+from typing import Dict, List, Optional, Protocol, Sequence
 
 import jax
 import numpy as np
@@ -26,6 +26,7 @@ from repro.core.choice import make_offspring
 from repro.core.double_sampling import sample_client_groups, \
     sample_population_keys
 from repro.core.nsga2 import fast_non_dominated_sort, knee_point, select
+from repro.engine.availability import RoundSim
 from repro.engine.types import BYTES_PER_PARAM, ERROR_COUNT_BYTES, \
     RoundReport
 
@@ -45,8 +46,12 @@ class Strategy(Protocol):
         """Execute one federated round (= one generation): sequence the
         backend's train/eval calls, account traffic on ``engine.stats``
         and return the round's ``RoundReport``.  ``gen`` is 1-based;
-        ``participants`` the sampled client ids; ``lr`` this round's
-        client learning rate."""
+        ``participants`` the client ids that checked in this round
+        (availability-filtered by the engine); ``lr`` this round's
+        client learning rate.  ``engine.round_ctx`` carries the round's
+        availability outcome (``RoundSim``) — ``survivors`` must be
+        passed to every backend call and dropped clients' downloads
+        booked as wasted."""
         ...
 
     def extras(self, engine) -> Dict:
@@ -55,40 +60,67 @@ class Strategy(Protocol):
         ...
 
 
-def _account_train(engine, keys, groups, download_models: bool):
+def _round_ctx(engine, participants) -> RoundSim:
+    """The round's availability outcome; a fresh inactive one when the
+    engine never drew a round (strategies driven outside FedEngine)."""
+    ctx = getattr(engine, "round_ctx", None)
+    if ctx is None:
+        return RoundSim.inactive(np.asarray(participants))
+    return ctx
+
+
+def _account_train(engine, keys, groups, download_models: bool,
+                   ctx: RoundSim):
     """Training-phase traffic of one fill-aggregated generation: payload
     down (t == 1 only — later rounds inherit weights already on device),
     payload up, one local pass per (individual, client) pair.  Logical
-    bytes are fp32; wire bytes come from the run's payload codecs."""
+    bytes are fp32; wire bytes come from the run's payload codecs.
+    Dropped clients (``ctx.dropped``) fail after download, before
+    upload: their downloads land on the wasted ledger, their passes
+    count (the device spent that compute) and they upload nothing."""
     stats, api = engine.stats, engine.api
     down, up = engine.downlink_codec, engine.uplink_codec
+    dropped = {int(c) for c in ctx.dropped}
     for key, group in zip(keys, groups):
         payload = api.payload_params(key)
-        for _ in group:
+        for cid in group:
+            dead = int(cid) in dropped
             if download_models:
                 stats.add_download(payload,      # theta^q + key (t == 1)
-                                   wire_bytes=down.wire_bytes(payload))
-            stats.add_upload(payload, wire_bytes=up.wire_bytes(payload))
+                                   wire_bytes=down.wire_bytes(payload),
+                                   wasted_copies=int(dead))
             stats.client_train_passes += 1
+            if not dead:
+                stats.add_upload(payload, wire_bytes=up.wire_bytes(payload))
 
 
-def _account_eval(engine, n_keys: int, n_participants: int,
-                  master_params: Optional[int] = None):
-    """Fitness-phase traffic (Section IV.G): the aggregated-model
-    download when the strategy broadcasts one (real-time NAS's master,
-    the FedAvg baseline's model — at downlink-codec wire size), the
-    n_keys choice-key downloads, and one error-count upload per
-    (key, client) pair (keys and counts are already minimal encodings —
-    wire == logical)."""
+def _account_eval(engine, n_keys: int, ctx: RoundSim,
+                  model_params: Sequence[int] = ()):
+    """Fitness-phase traffic (Section IV.G): every broadcast
+    aggregated-model download (real-time NAS's master, the FedAvg
+    baseline's model, the offline baseline's per-individual models — at
+    downlink-codec wire size), the n_keys choice-key downloads, and one
+    error-count upload per (key, client) pair (keys and counts are
+    already minimal encodings — wire == logical).  Every strategy
+    routes its fitness accounting through here, so the Section IV.G
+    offline-vs-realtime comparison counts the same transfer kinds on
+    both sides.  Downloads go to every participant (the round's
+    communication plan is fixed before anyone fails) — the dropped
+    clients' share is booked as wasted — while only survivors upload
+    counts."""
     stats, api = engine.stats, engine.api
-    if master_params is not None:
+    n_participants = len(ctx.participants)
+    n_wasted = ctx.n_dropped
+    for p in model_params:
         stats.add_eval_download_bytes(
-            BYTES_PER_PARAM * master_params, copies=n_participants,
-            wire_nbytes=engine.downlink_codec.wire_bytes(master_params))
+            BYTES_PER_PARAM * p, copies=n_participants,
+            wire_nbytes=engine.downlink_codec.wire_bytes(p),
+            wasted_copies=n_wasted)
     stats.add_eval_download_bytes(api.key_bytes * n_keys,
-                                  copies=n_participants)
+                                  copies=n_participants,
+                                  wasted_copies=n_wasted)
     stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * n_keys,
-                                copies=n_participants)
+                                copies=ctx.n_survivors)
 
 
 class RealTimeNas:
@@ -108,29 +140,46 @@ class RealTimeNas:
 
     def round(self, engine, gen, participants, lr):
         cfg, api, backend = engine.cfg, engine.api, engine.backend
+        ctx = _round_ctx(engine, participants)
+        survivors = ctx.survivors
+
+        # short groups are only legitimate when clients can actually be
+        # absent — a synchronous run short of clients is a misconfig
+        strict = not ctx.active
 
         # --- t == 1 only: train the parent sub-models (Algorithm 4 l.15-26)
         if gen == 1:
             groups = sample_client_groups(engine.rng, participants,
-                                          cfg.population)
-            _account_train(engine, self.parents, groups, download_models=True)
-            self.master = backend.train_fill(self.master, self.parents,
-                                             groups, lr)
+                                          cfg.population, strict=strict)
+            _account_train(engine, self.parents, groups,
+                           download_models=True, ctx=ctx)
+            if ctx.n_survivors:
+                self.master = backend.train_fill(self.master, self.parents,
+                                                 groups, lr,
+                                                 survivors=survivors)
 
         # --- offspring: inherit weights, never reinitialize (l.27-41)
         offspring = make_offspring(engine.rng, self.parents, cfg.population,
                                    cfg.crossover, cfg.mutation)
         groups = sample_client_groups(engine.rng, participants,
-                                      cfg.population)
+                                      cfg.population, strict=strict)
         _account_train(engine, offspring, groups,
-                       download_models=(gen == 1))
-        self.master = backend.train_fill(self.master, offspring, groups, lr)
+                       download_models=(gen == 1), ctx=ctx)
+        if ctx.n_survivors:
+            self.master = backend.train_fill(self.master, offspring, groups,
+                                             lr, survivors=survivors)
 
         # --- fitness: master + all 2N keys to every participant (l.43-49)
         combined = list(self.parents) + list(offspring)
-        _account_eval(engine, len(combined), len(participants),
-                      master_params=api.master_params())
-        errs = backend.eval_shared(self.master, combined, participants)
+        _account_eval(engine, len(combined), ctx,
+                      model_params=[api.master_params()])
+        if ctx.n_survivors:
+            errs = backend.eval_shared(self.master, combined, participants,
+                                       survivors=survivors)
+        else:
+            # nobody reported: no fitness signal this round — selection
+            # falls back to the FLOPs objective (pessimistic error 1.0)
+            errs = np.ones(len(combined))
         fl = np.array([api.flops(k) for k in combined], dtype=float)
         objs = np.stack([errs, fl], axis=1)
 
@@ -174,7 +223,9 @@ class OfflineNas:
 
     def _train_and_eval(self, engine, keys, participants, lr):
         api, stats, backend = engine.api, engine.stats, engine.backend
+        ctx = _round_ctx(engine, participants)
         m = len(participants)
+        n_dropped = ctx.n_dropped
         inits = []
         for _ in keys:
             self._reinit_seed += 1
@@ -184,18 +235,25 @@ class OfflineNas:
         payloads = [api.payload_params(k) for k in keys]
         for payload in payloads:                 # every client trains
             stats.add_download(payload, copies=m,
-                               wire_bytes=down.wire_bytes(payload))
-            stats.add_upload(payload, copies=m,
+                               wire_bytes=down.wire_bytes(payload),
+                               wasted_copies=n_dropped)
+            stats.add_upload(payload, copies=ctx.n_survivors,
                              wire_bytes=up.wire_bytes(payload))
             stats.client_train_passes += m
-        models = backend.train_fedavg_population(inits, keys,
-                                                 participants, lr)
-        for payload in payloads:                 # aggregated model for eval
-            stats.add_eval_download_bytes(
-                BYTES_PER_PARAM * payload, copies=m,
-                wire_nbytes=down.wire_bytes(payload))
-        stats.add_eval_upload_bytes(ERROR_COUNT_BYTES * len(keys), copies=m)
-        errs = backend.eval_paired(models, keys, participants)
+        if ctx.n_survivors:
+            models = backend.train_fedavg_population(
+                inits, keys, participants, lr, survivors=ctx.survivors)
+        else:
+            models = inits               # no uploads: FedAvg is a no-op
+        # fitness phase: per-individual aggregated models + choice keys
+        # down, error counts up — through the same accounting helper as
+        # the real-time strategy, so Section IV.G counts both sides alike
+        _account_eval(engine, len(keys), ctx, model_params=payloads)
+        if ctx.n_survivors:
+            errs = backend.eval_paired(models, keys, participants,
+                                       survivors=ctx.survivors)
+        else:
+            errs = np.ones(len(keys))
         fl = [api.flops(k) for k in keys]
         return np.stack([errs, np.asarray(fl, dtype=float)], axis=1)
 
@@ -237,19 +295,27 @@ class FedAvgBaseline:
 
     def round(self, engine, gen, participants, lr):
         stats, api, backend = engine.stats, engine.api, engine.backend
+        ctx = _round_ctx(engine, participants)
         m = len(participants)
         payload = api.payload_params(self.key)
         stats.add_download(
             payload, copies=m,
-            wire_bytes=engine.downlink_codec.wire_bytes(payload))
+            wire_bytes=engine.downlink_codec.wire_bytes(payload),
+            wasted_copies=ctx.n_dropped)
         stats.add_upload(
-            payload, copies=m,
+            payload, copies=ctx.n_survivors,
             wire_bytes=engine.uplink_codec.wire_bytes(payload))
         stats.client_train_passes += m
-        self.params = backend.train_fedavg(self.params, self.key,
-                                           participants, lr)
-        _account_eval(engine, 1, m, master_params=payload)
-        err = backend.eval_shared(self.params, [self.key], participants)[0]
+        if ctx.n_survivors:
+            self.params = backend.train_fedavg(self.params, self.key,
+                                               participants, lr,
+                                               survivors=ctx.survivors)
+        _account_eval(engine, 1, ctx, model_params=[payload])
+        if ctx.n_survivors:
+            err = backend.eval_shared(self.params, [self.key], participants,
+                                      survivors=ctx.survivors)[0]
+        else:
+            err = 1.0                    # nobody reported this round
         return RoundReport(gen=gen, best_err=float(err))
 
     def extras(self, engine):

@@ -29,6 +29,86 @@ AGGREGATE_BACKENDS = ("xla", "pallas")
 
 
 @dataclasses.dataclass
+class ClientSimConfig:
+    """Real-time client availability / heterogeneity simulation.
+
+    The paper's headline claim is *real-time* federated NAS: mobile
+    clients come and go, and double sampling plus weight inheritance
+    keep the search stable despite that.  This config models the three
+    failure modes the FedNAS literature singles out, all drawn from a
+    dedicated RNG stream (``seed``) so the *search* trajectory
+    (participant sampling, offspring variation) never shifts when the
+    simulation knobs change:
+
+      * ``availability`` — probability that a sampled client actually
+        checks in this round (it never receives a download otherwise).
+        ``availability_trace`` optionally gives one probability per
+        client (device classes: phones vs. plugged-in tablets),
+        overriding the scalar.
+      * ``dropout`` — probability that a checked-in client fails
+        *after* its downloads but *before* any upload: its local
+        training is lost (excluded from aggregation, no upload bytes),
+        it reports no evaluation counts, and every byte pushed to it
+        this round lands on the ``CommStats`` wasted ledger.
+      * ``straggler_fraction`` / ``straggler_slowdown`` /
+        ``round_deadline`` — a fixed ``straggler_fraction`` of clients
+        run ``straggler_slowdown``× slower; per round each checked-in
+        client finishes at ``speed × U(0.8, 1.2)`` (1.0 = a nominal
+        round) and clients past ``round_deadline`` miss the round's
+        aggregation — same consequence as ``dropout``.  ``None``
+        disables the deadline.
+
+    The defaults simulate nothing: ``ClientSimConfig()`` reproduces the
+    fully-synchronous trajectories bit for bit (no sim RNG is even
+    drawn), which is asserted by ``tests/test_availability.py``.
+    """
+    availability: float = 1.0
+    availability_trace: Optional[tuple] = None   # per-client P(available)
+    dropout: float = 0.0
+    straggler_fraction: float = 0.0
+    straggler_slowdown: float = 1.0
+    round_deadline: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.availability <= 1.0:
+            raise ValueError(
+                f"availability must be in (0, 1], got {self.availability}")
+        if self.availability_trace is not None:
+            trace = tuple(float(p) for p in self.availability_trace)
+            if not all(0.0 <= p <= 1.0 for p in trace):
+                raise ValueError("availability_trace entries must be in "
+                                 f"[0, 1], got {trace}")
+            self.availability_trace = trace
+        if not 0.0 <= self.dropout <= 1.0:
+            raise ValueError(
+                f"dropout must be in [0, 1], got {self.dropout}")
+        if not 0.0 <= self.straggler_fraction <= 1.0:
+            raise ValueError(f"straggler_fraction must be in [0, 1], "
+                             f"got {self.straggler_fraction}")
+        if self.straggler_slowdown < 1.0:
+            raise ValueError(f"straggler_slowdown must be >= 1, "
+                             f"got {self.straggler_slowdown}")
+        if self.round_deadline is not None and self.round_deadline <= 0:
+            raise ValueError(f"round_deadline must be > 0 or None, "
+                             f"got {self.round_deadline}")
+        if self.straggler_fraction > 0.0 and self.round_deadline is None:
+            raise ValueError(
+                "straggler_fraction > 0 does nothing without a "
+                "round_deadline (stragglers only miss rounds against a "
+                "deadline) — set round_deadline or drop the stragglers")
+
+    @property
+    def is_active(self) -> bool:
+        """Whether any knob deviates from the fully-synchronous world.
+        Inactive configs take the exact legacy engine path."""
+        return (self.availability < 1.0
+                or self.availability_trace is not None
+                or self.dropout > 0.0
+                or self.round_deadline is not None)
+
+
+@dataclasses.dataclass
 class RunConfig:
     """Every knob of a federated NAS run, validated at construction.
 
@@ -86,6 +166,13 @@ class RunConfig:
         persistent-master paths.
       * ``downlink_codec`` — same spec grammar for server->client
         transfers (master broadcasts / sub-model downloads).
+
+    Client availability (``client_sim``):
+      * a ``ClientSimConfig`` (also accepted as a plain dict) modeling
+        real-time device behavior — per-round availability, post-download
+        dropout, stragglers against a round deadline.  The default
+        simulates nothing and reproduces the synchronous trajectories
+        bit for bit; see the ``ClientSimConfig`` docstring.
     """
     population: int = 10
     generations: int = 500
@@ -103,8 +190,14 @@ class RunConfig:
     fused: bool = True                  # one dispatch per generation phase
     uplink_codec: str = "none"          # client->server payload codec
     downlink_codec: str = "none"        # server->client payload codec
+    client_sim: ClientSimConfig = dataclasses.field(
+        default_factory=ClientSimConfig)   # availability / dropout model
 
     def __post_init__(self):
+        if self.client_sim is None:
+            self.client_sim = ClientSimConfig()
+        elif isinstance(self.client_sim, dict):
+            self.client_sim = ClientSimConfig(**self.client_sim)
         if self.aggregate_backend not in AGGREGATE_BACKENDS:
             raise ValueError(
                 f"unknown aggregate_backend {self.aggregate_backend!r}; "
@@ -166,6 +259,13 @@ class CommStats:
         master download (real-time strategy only), 2N choice keys down
         (``SupernetAPI.key_bytes`` each) and one int32 error count per
         evaluated key up.  Always <= the corresponding totals.
+      * ``wasted_down_bytes`` / ``wasted_down_wire_bytes`` — the subset
+        of down/down_wire_bytes pushed to clients that later dropped
+        out of the round (``ClientSimConfig.dropout`` / missed
+        ``round_deadline``): bytes the server spent for nothing.
+        Uploads have no wasted ledger — a dropped client never uploads.
+        ``client_train_passes`` *does* include passes whose upload was
+        lost: the device spent that compute before failing.
     """
     down_bytes: float = 0.0
     up_bytes: float = 0.0
@@ -174,16 +274,22 @@ class CommStats:
     eval_up_bytes: float = 0.0          # subset of up_bytes (fitness phase)
     down_wire_bytes: float = 0.0        # codec wire size of down_bytes
     up_wire_bytes: float = 0.0          # codec wire size of up_bytes
+    wasted_down_bytes: float = 0.0      # downloads to clients that dropped
+    wasted_down_wire_bytes: float = 0.0  # the same at codec wire size
 
     def add_download(self, params: int, copies: int = 1,
-                     wire_bytes: Optional[float] = None):
+                     wire_bytes: Optional[float] = None,
+                     wasted_copies: int = 0):
         """Account ``copies`` sub-model downloads of ``params`` params;
         ``wire_bytes`` is the per-payload codec wire size (defaults to
-        the fp32-logical size)."""
+        the fp32-logical size).  ``wasted_copies`` of them (<= copies)
+        went to clients that later dropped and are additionally booked
+        on the wasted ledger."""
+        wire = BYTES_PER_PARAM * params if wire_bytes is None else wire_bytes
         self.down_bytes += BYTES_PER_PARAM * params * copies
-        self.down_wire_bytes += (BYTES_PER_PARAM * params
-                                 if wire_bytes is None
-                                 else wire_bytes) * copies
+        self.down_wire_bytes += wire * copies
+        self.wasted_down_bytes += BYTES_PER_PARAM * params * wasted_copies
+        self.wasted_down_wire_bytes += wire * wasted_copies
 
     def add_upload(self, params: int, copies: int = 1,
                    wire_bytes: Optional[float] = None):
@@ -195,13 +301,17 @@ class CommStats:
                                else wire_bytes) * copies
 
     def add_eval_download_bytes(self, nbytes: float, copies: int = 1,
-                                wire_nbytes: Optional[float] = None):
+                                wire_nbytes: Optional[float] = None,
+                                wasted_copies: int = 0):
         """Account fitness-phase downloads of ``nbytes`` logical bytes
-        each (``wire_nbytes`` at codec size; defaults to ``nbytes``)."""
+        each (``wire_nbytes`` at codec size; defaults to ``nbytes``);
+        ``wasted_copies`` as in ``add_download``."""
+        wire = nbytes if wire_nbytes is None else wire_nbytes
         self.down_bytes += nbytes * copies
         self.eval_down_bytes += nbytes * copies
-        self.down_wire_bytes += (nbytes if wire_nbytes is None
-                                 else wire_nbytes) * copies
+        self.down_wire_bytes += wire * copies
+        self.wasted_down_bytes += nbytes * wasted_copies
+        self.wasted_down_wire_bytes += wire * wasted_copies
 
     def add_eval_upload_bytes(self, nbytes: float, copies: int = 1,
                               wire_nbytes: Optional[float] = None):
@@ -232,7 +342,15 @@ class RoundReport:
     (kept cumulative for the legacy history layout — it is *not* a
     per-round time); ``round_s`` is this round's wall-clock delta, the
     per-generation number benchmarks and steady-state comparisons
-    want."""
+    want.
+
+    Availability fields (stamped only when ``ClientSimConfig`` is
+    active, ``None`` — and absent from the history dict — otherwise):
+    ``n_sampled`` clients drawn by participation sampling,
+    ``n_available`` of them checked in, ``n_dropped`` failed after
+    download but before upload (dropout or missed deadline),
+    ``n_survivors`` completed the round; ``wasted_down_gb`` is the
+    cumulative wasted-download ledger in gigabytes."""
     gen: int
     objs: Optional[np.ndarray] = None          # (2N, 2) [err, flops]
     parent_keys: Optional[List[np.ndarray]] = None
@@ -246,11 +364,19 @@ class RoundReport:
     train_passes: int = 0
     wall_s: float = 0.0      # cumulative since run() start
     round_s: float = 0.0     # this round's wall-clock delta
+    # client-availability simulation (None unless ClientSimConfig active):
+    n_sampled: Optional[int] = None     # drawn by participation sampling
+    n_available: Optional[int] = None   # actually checked in
+    n_dropped: Optional[int] = None     # failed after download, pre-upload
+    n_survivors: Optional[int] = None   # completed every upload
+    wasted_down_gb: Optional[float] = None   # cumulative wasted ledger
 
 
 HISTORY_FIELDS = ("gen", "objs", "parent_keys", "best_err", "knee_err",
                   "best_key", "knee_key", "down_gb", "up_gb",
-                  "train_passes", "wall_s", "round_s")
+                  "train_passes", "wall_s", "round_s", "n_sampled",
+                  "n_available", "n_dropped", "n_survivors",
+                  "wasted_down_gb")
 
 
 def append_report(hist: Dict[str, list], report: RoundReport) -> None:

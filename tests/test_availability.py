@@ -1,0 +1,423 @@
+"""Client-availability simulation (``ClientSimConfig``): survivor-mask
+invariants, backend parity under dropout, graceful group degeneration,
+the wasted-bytes ledger, and the no-op guarantee (an inactive — or
+active but harmless — simulation reproduces the synchronous trajectories
+bit for bit)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_api
+from repro.core.double_sampling import sample_client_groups
+from repro.data import make_classification, make_clients, partition_iid
+from repro.engine import ClientSimConfig, ClientSimulator, FedEngine, \
+    OfflineNas, RunConfig
+from repro.engine.availability import RoundSim
+
+PARITY_BACKENDS = ("loop", "vmap", "mesh")
+
+
+def tiny_clients(num_clients=8, n=480, seed=0):
+    x, y = make_classification(seed, n, image=8, signal=1.5, noise=0.5)
+    return make_clients(x, y, partition_iid(seed, n, num_clients),
+                        batch=20, test_batch=20)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+def leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(p), np.asarray(q))
+               for p, q in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def max_leaf_diff(a, b):
+    return max(float(np.abs(np.asarray(p) - np.asarray(q)).max())
+               for p, q in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# config validation / simulator unit behavior
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"availability": 0.0}, {"availability": 1.5}, {"dropout": -0.1},
+    {"dropout": 1.01}, {"straggler_fraction": 2.0},
+    {"straggler_slowdown": 0.5}, {"round_deadline": 0.0},
+    {"availability_trace": (0.5, 2.0)},
+    # stragglers without a deadline would silently simulate nothing
+    {"straggler_fraction": 0.3, "straggler_slowdown": 10.0},
+])
+def test_client_sim_config_rejected_at_config_time(kw):
+    with pytest.raises(ValueError):
+        ClientSimConfig(**kw)
+
+
+def test_run_config_accepts_client_sim_dict():
+    cfg = RunConfig(client_sim={"dropout": 0.25})
+    assert isinstance(cfg.client_sim, ClientSimConfig)
+    assert cfg.client_sim.dropout == 0.25
+    assert cfg.client_sim.is_active
+    assert not RunConfig().client_sim.is_active
+
+
+def test_trace_length_validated_at_engine_build(api):
+    clients = tiny_clients(num_clients=4, n=240)
+    with pytest.raises(ValueError, match="availability_trace"):
+        FedEngine(api, clients, RunConfig(
+            client_sim=ClientSimConfig(availability_trace=(0.5, 0.5))))
+
+
+def test_simulator_is_deterministic_and_separate_stream():
+    sampled = np.arange(10)
+    draws = []
+    for _ in range(2):
+        sim = ClientSimulator(ClientSimConfig(dropout=0.4, seed=3), 10)
+        ctx = sim.draw_round(sampled)
+        draws.append((tuple(ctx.participants), tuple(sorted(ctx.survivors)),
+                      tuple(ctx.dropped)))
+    assert draws[0] == draws[1]
+    sim = ClientSimulator(ClientSimConfig(), 10)
+    ctx = sim.draw_round(sampled)
+    assert ctx.survivors is None and ctx.n_dropped == 0
+    np.testing.assert_array_equal(ctx.participants, sampled)
+
+
+def test_stragglers_always_miss_a_tight_deadline():
+    """slowdown 10 vs deadline 2: every straggler's finish time
+    (10 x U(0.8, 1.2)) exceeds the deadline; normal clients never do."""
+    cfg = ClientSimConfig(straggler_fraction=0.5, straggler_slowdown=10.0,
+                          round_deadline=2.0)
+    sim = ClientSimulator(cfg, 10)
+    slow = {i for i in range(10) if sim.speed[i] > 1.0}
+    assert len(slow) == 5
+    for _ in range(20):
+        ctx = sim.draw_round(np.arange(10))
+        assert set(int(c) for c in ctx.dropped) == slow
+
+
+def test_availability_filter_preserves_order():
+    sim = ClientSimulator(ClientSimConfig(availability=0.5, seed=0), 16)
+    sampled = np.random.default_rng(1).permutation(16)
+    ctx = sim.draw_round(sampled)
+    pos = {int(c): i for i, c in enumerate(sampled)}
+    order = [pos[int(c)] for c in ctx.participants]
+    assert order == sorted(order)       # subsequence of the sampled order
+
+
+# ---------------------------------------------------------------------------
+# participation policy: graceful group degeneration
+# ---------------------------------------------------------------------------
+
+def test_groups_unchanged_when_enough_clients():
+    """m >= N keeps the exact legacy semantics (groups of floor(m/N),
+    extras idle) — same RNG stream, same arrays."""
+    participants = np.arange(11)
+    a = sample_client_groups(np.random.default_rng(7), participants, 4)
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(participants)
+    assert [g.tolist() for g in a] == [perm[i * 2:(i + 1) * 2].tolist()
+                                       for i in range(4)]
+
+
+def test_groups_degrade_gracefully_below_population():
+    groups = sample_client_groups(np.random.default_rng(0), np.arange(3), 5)
+    assert [len(g) for g in groups] == [1, 1, 1, 0, 0]
+    assert sorted(int(g[0]) for g in groups[:3]) == [0, 1, 2]
+    empty = sample_client_groups(np.random.default_rng(0),
+                                 np.empty(0, np.int64), 4)
+    assert [len(g) for g in empty] == [0, 0, 0, 0]
+
+
+def test_strict_groups_still_reject_short_fleets(api):
+    """Degeneration is an availability feature, not a license to
+    misconfigure: a fully synchronous run (no ClientSimConfig) with
+    population > clients still fails loudly, like it always did."""
+    with pytest.raises(ValueError, match="need >= 5 clients"):
+        sample_client_groups(np.random.default_rng(0), np.arange(3), 5,
+                             strict=True)
+    clients = tiny_clients(num_clients=3, n=180)
+    eng = FedEngine(api, clients,
+                    RunConfig(population=5, generations=1, seed=0))
+    with pytest.raises(ValueError, match="need >= 5 clients"):
+        eng.run()
+    # the same fleet under an active availability sim runs fine
+    res = FedEngine(api, clients,
+                    RunConfig(population=5, generations=1, seed=0,
+                              client_sim=ClientSimConfig(dropout=0.2))).run()
+    assert np.isfinite(res.reports[0].objs).all()
+
+
+# ---------------------------------------------------------------------------
+# the no-op guarantee: dropout=0 => bitwise-identical to the legacy path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bk", ["loop", "vmap"])
+def test_harmless_sim_bitwise_identical_to_default(api, bk):
+    """An ACTIVE simulation that never drops anyone (generous deadline,
+    no dropout) must reproduce the default path bit for bit: master,
+    CommStats and objs — the sim draws from its own RNG stream, so the
+    search is untouched."""
+    clients = tiny_clients()
+    runs = {}
+    for name, sim in (("off", None),
+                      ("noop", ClientSimConfig(round_deadline=100.0))):
+        cfg = RunConfig(population=4, generations=2, seed=0, lr0=0.01,
+                        backend=bk,
+                        **({} if sim is None else {"client_sim": sim}))
+        runs[name] = FedEngine(api, clients, cfg).run()
+    assert leaves_equal(runs["off"].extras["final_master"],
+                        runs["noop"].extras["final_master"])
+    assert dataclasses.asdict(runs["off"].stats) == \
+        dataclasses.asdict(runs["noop"].stats)
+    for a, b in zip(runs["off"].reports, runs["noop"].reports):
+        np.testing.assert_array_equal(a.objs, b.objs)
+    # the harmless sim still reports availability (all survive)...
+    assert all(r.n_dropped == 0 and r.n_survivors == len(clients)
+               for r in runs["noop"].reports)
+    assert runs["noop"].stats.wasted_down_bytes == 0.0
+    # ...while the inactive run keeps the legacy history layout
+    assert "n_survivors" not in runs["off"].history()
+    assert all(r.n_survivors is None for r in runs["off"].reports)
+
+
+# ---------------------------------------------------------------------------
+# dropout: backend parity, survivor masking, the wasted ledger
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dropout_parity(api):
+    clients = tiny_clients()
+    sim = ClientSimConfig(dropout=0.3, seed=1)
+    out = {}
+    for bk in PARITY_BACKENDS:
+        eng = FedEngine(api, clients,
+                        RunConfig(population=4, generations=2, seed=0,
+                                  lr0=0.01, backend=bk, client_sim=sim))
+        out[bk] = (eng.run(), eng.backend.dispatches)
+    return out
+
+
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_dropout_backend_parity(dropout_parity, bk):
+    """30% dropout: all three backends agree — byte-identical CommStats
+    (including the wasted ledger), objs within 1e-5, masters within
+    1e-5."""
+    loop, other = dropout_parity["loop"][0], dropout_parity[bk][0]
+    assert dataclasses.asdict(loop.stats) == dataclasses.asdict(other.stats)
+    assert loop.stats.wasted_down_bytes > 0
+    for a, b in zip(loop.reports, other.reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+        assert (a.n_dropped, a.n_survivors) == (b.n_dropped, b.n_survivors)
+    assert max_leaf_diff(loop.extras["final_master"],
+                         other.extras["final_master"]) <= 1e-5
+
+
+@pytest.mark.parametrize("bk", ["vmap", "mesh"])
+def test_dropout_keeps_fused_dispatch_bound(dropout_parity, bk):
+    """Survivor masking rides weight-0 rows / int32 masks, so the fused
+    path still issues exactly 2*gens + 1 dispatches under dropout."""
+    assert dropout_parity[bk][1] == 2 * 2 + 1
+
+
+def test_dropout_fused_vs_nonfused_parity(api):
+    clients = tiny_clients()
+    sim = ClientSimConfig(dropout=0.3, seed=1)
+    out = {}
+    for fused in (False, True):
+        out[fused] = FedEngine(
+            api, clients,
+            RunConfig(population=4, generations=2, seed=0, lr0=0.01,
+                      backend="vmap", fused=fused, client_sim=sim)).run()
+    assert dataclasses.asdict(out[False].stats) == \
+        dataclasses.asdict(out[True].stats)
+    for a, b in zip(out[False].reports, out[True].reports):
+        np.testing.assert_array_equal(a.objs, b.objs)
+    assert max_leaf_diff(out[False].extras["final_master"],
+                         out[True].extras["final_master"]) <= 1e-6
+
+
+def test_full_dropout_freezes_master_and_uploads_nothing(api):
+    """dropout=1.0: dropped clients never contribute — the master stays
+    bitwise at its init, zero upload bytes, and every download is
+    wasted."""
+    clients = tiny_clients(num_clients=4, n=240)
+    res = FedEngine(api, clients,
+                    RunConfig(population=2, generations=2, seed=0,
+                              lr0=0.01, backend="vmap",
+                              client_sim=ClientSimConfig(dropout=1.0))).run()
+    assert leaves_equal(res.extras["final_master"],
+                        api.init(jax.random.PRNGKey(0)))
+    assert res.stats.up_bytes == 0 and res.stats.up_wire_bytes == 0
+    assert res.stats.eval_up_bytes == 0
+    assert res.stats.wasted_down_bytes == res.stats.down_bytes > 0
+    # no fitness reports: pessimistic error 1.0 everywhere
+    assert all(float(e) == 1.0 for r in res.reports for e in r.objs[:, 0])
+
+
+def test_wasted_ledger_arithmetic():
+    from repro.engine import CommStats
+    s = CommStats()
+    s.add_download(100, copies=4, wire_bytes=100.0, wasted_copies=1)
+    assert s.down_bytes == 1600 and s.down_wire_bytes == 400
+    assert s.wasted_down_bytes == 400 and s.wasted_down_wire_bytes == 100
+    s.add_eval_download_bytes(8, copies=3, wasted_copies=2)
+    assert s.wasted_down_bytes == 416 and s.eval_down_bytes == 24
+
+
+def test_dropped_only_in_uploads_not_downloads(api):
+    """Per round: downloads go to every available participant (the
+    dropped share booked as wasted), uploads only to survivors —
+    checked against the per-round report counts."""
+    clients = tiny_clients(num_clients=6, n=360)
+    cfg = RunConfig(population=2, generations=3, seed=0, lr0=0.01,
+                    backend="vmap",
+                    client_sim=ClientSimConfig(dropout=0.4, seed=5))
+    res = FedEngine(api, clients, cfg).run()
+    from repro.engine import BYTES_PER_PARAM, ERROR_COUNT_BYTES
+    two_n = 2 * cfg.population
+    key_down = api.key_bytes * two_n
+    master_down = BYTES_PER_PARAM * api.master_params()
+    expect_eval_down = sum((master_down + key_down) * r.n_available
+                           for r in res.reports)
+    expect_eval_up = sum(ERROR_COUNT_BYTES * two_n * r.n_survivors
+                         for r in res.reports)
+    assert res.stats.eval_down_bytes == expect_eval_down
+    assert res.stats.eval_up_bytes == expect_eval_up
+    assert any(r.n_dropped > 0 for r in res.reports)
+
+
+# ---------------------------------------------------------------------------
+# availability / stragglers end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_low_availability_degenerate_groups_run(api):
+    """Availability far below population size: rounds run with partial
+    (even empty) groups and the three backends still agree."""
+    clients = tiny_clients(num_clients=6, n=360)
+    sim = ClientSimConfig(availability=0.4, seed=2)
+    out = {}
+    for bk in PARITY_BACKENDS:
+        out[bk] = FedEngine(api, clients,
+                            RunConfig(population=5, generations=3, seed=0,
+                                      lr0=0.01, backend=bk,
+                                      client_sim=sim)).run()
+    for bk in ("vmap", "mesh"):
+        assert dataclasses.asdict(out["loop"].stats) == \
+            dataclasses.asdict(out[bk].stats)
+        for a, b in zip(out["loop"].reports, out[bk].reports):
+            np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+    assert any(r.n_available < 5 for r in out["loop"].reports)
+    assert all(np.isfinite(r.objs).all() for r in out["loop"].reports)
+
+
+@pytest.mark.slow
+def test_offline_strategy_under_dropout_parity(api):
+    """The offline baseline's fedavg-population / eval-paired paths
+    renormalize over survivors identically on every backend."""
+    clients = tiny_clients(num_clients=4, n=240)
+    sim = ClientSimConfig(dropout=0.5, seed=4)
+    out = {}
+    for bk in PARITY_BACKENDS:
+        out[bk] = FedEngine(api, clients,
+                            RunConfig(population=2, generations=1, seed=1,
+                                      lr0=0.01, backend=bk, client_sim=sim),
+                            strategy=OfflineNas()).run()
+    for bk in ("vmap", "mesh"):
+        assert dataclasses.asdict(out["loop"].stats) == \
+            dataclasses.asdict(out[bk].stats)
+        np.testing.assert_allclose(out["loop"].reports[0].objs,
+                                   out[bk].reports[0].objs, atol=1e-5)
+
+
+def test_straggler_deadline_wastes_bytes_every_round(api):
+    """Deterministic stragglers (slowdown 10 vs deadline 2) miss every
+    round: the wasted ledger grows monotonically round over round."""
+    clients = tiny_clients(num_clients=6, n=360)
+    sim = ClientSimConfig(straggler_fraction=0.34, straggler_slowdown=10.0,
+                          round_deadline=2.0, seed=0)
+    res = FedEngine(api, clients,
+                    RunConfig(population=3, generations=3, seed=0,
+                              lr0=0.01, backend="vmap",
+                              client_sim=sim)).run()
+    wasted = [r.wasted_down_gb for r in res.reports]
+    assert all(r.n_dropped == 2 for r in res.reports)
+    assert all(b > a for a, b in zip(wasted, wasted[1:]))
+
+
+@pytest.mark.slow
+def test_codec_times_dropout_backend_parity(api):
+    """The full matrix claim: availability composes with the payload
+    codecs — int8 uplink + 30% dropout still yields byte-identical
+    CommStats (both ledgers + wasted) and close masters across
+    backends."""
+    clients = tiny_clients(num_clients=4, n=240)
+    sim = ClientSimConfig(dropout=0.3, seed=2)
+    out = {}
+    for bk in ("loop", "vmap"):
+        out[bk] = FedEngine(api, clients,
+                            RunConfig(population=3, generations=2, seed=0,
+                                      lr0=0.01, backend=bk,
+                                      uplink_codec="int8",
+                                      client_sim=sim)).run()
+    assert dataclasses.asdict(out["loop"].stats) == \
+        dataclasses.asdict(out["vmap"].stats)
+    assert out["loop"].stats.up_wire_bytes < out["loop"].stats.up_bytes
+    for a, b in zip(out["loop"].reports, out["vmap"].reports):
+        np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
+    # int8 quantization of the uplink delta amplifies the usual <=1e-5
+    # loop-vs-vmap reduction-order noise slightly (the grid snaps near-
+    # ties to different levels); errors above stay exact
+    assert max_leaf_diff(out["loop"].extras["final_master"],
+                         out["vmap"].extras["final_master"]) <= 5e-5
+
+
+def test_run_is_reentrant_with_sim(api):
+    """The simulator is rebuilt per run(): two runs of one engine
+    produce identical survivor sequences and stats."""
+    clients = tiny_clients(num_clients=4, n=240)
+    eng = FedEngine(api, clients,
+                    RunConfig(population=2, generations=2, seed=0,
+                              lr0=0.01, backend="vmap",
+                              client_sim=ClientSimConfig(dropout=0.4)))
+    first, second = eng.run(), eng.run()
+    assert dataclasses.asdict(first.stats) == dataclasses.asdict(second.stats)
+    assert [r.n_survivors for r in first.reports] == \
+        [r.n_survivors for r in second.reports]
+    assert leaves_equal(first.extras["final_master"],
+                        second.extras["final_master"])
+
+
+@pytest.mark.slow
+def test_25_generations_at_30pct_dropout(api):
+    """The acceptance regression: a 25-generation run at 30% dropout
+    completes, keeps the fused dispatch bound, reports survivors every
+    round and ends with a finite search trajectory."""
+    clients = tiny_clients()
+    gens = 25
+    eng = FedEngine(api, clients,
+                    RunConfig(population=4, generations=gens, seed=0,
+                              lr0=0.01, backend="vmap",
+                              client_sim=ClientSimConfig(dropout=0.3,
+                                                         seed=7)))
+    res = eng.run()
+    assert len(res.reports) == gens
+    assert eng.backend.dispatches == 2 * gens + 1
+    assert all(np.isfinite(r.objs).all() for r in res.reports)
+    assert all(r.n_survivors + r.n_dropped == r.n_available
+               for r in res.reports)
+    assert sum(r.n_dropped for r in res.reports) > 0
+    assert res.stats.wasted_down_bytes > 0
+    hist = res.history()
+    assert len(hist["n_survivors"]) == gens
+
+
+def test_round_sim_inactive_shim():
+    ctx = RoundSim.inactive(np.arange(3))
+    assert not ctx.active and ctx.n_survivors == 3 and ctx.n_dropped == 0

@@ -232,6 +232,7 @@ def codec_parity(api):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("pair", [("int8", "none"), ("topk:0.25", "cast")])
 @pytest.mark.parametrize("bk", ["vmap", "mesh"])
 def test_codec_backend_parity(codec_parity, pair, bk):
@@ -247,6 +248,7 @@ def test_codec_backend_parity(codec_parity, pair, bk):
         np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("codec", ["cast", "int8", "topk:0.25"])
 def test_fused_nonfused_codec_parity(api, codec):
     """Each codec layered on top of the fused path reproduces the

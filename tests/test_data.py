@@ -22,15 +22,42 @@ def test_iid_partition_is_disjoint_cover(n, k, seed):
 
 
 @settings(max_examples=25, deadline=None)
-@given(st.integers(2, 10), st.integers(1, 5), st.integers(0, 1000))
-def test_label_partition_classes_per_client(k, cpc, seed):
+@given(st.integers(2, 10), st.integers(1, 10), st.integers(0, 1000))
+def test_label_partition_exactly_cpc_distinct_classes(k, cpc, seed):
+    """Every client holds data from EXACTLY cpc distinct classes (not
+    "up to" — the old stack-based dealer could hand out duplicates when
+    cpc did not divide the class count)."""
     labels = np.repeat(np.arange(10), 50)
     shards = partition_label(seed, labels, k, classes_per_client=cpc)
     allidx = np.concatenate([s for s in shards if len(s)])
     assert len(np.unique(allidx)) == len(allidx)          # disjoint
     for s in shards:
-        if len(s):
-            assert len(np.unique(labels[s])) <= cpc       # non-IID bound
+        assert len(np.unique(labels[s])) == cpc
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 10), st.integers(0, 1000))
+def test_label_partition_full_coverage_when_all_classes_held(k, cpc, seed):
+    """Whenever k*cpc >= #classes the balanced quota deal guarantees
+    every class a holder, hence full data coverage; below that bound
+    exactly the unheld classes' data is dropped."""
+    labels = np.repeat(np.arange(10), 30)
+    shards = partition_label(seed, labels, k, classes_per_client=cpc)
+    allidx = np.concatenate([s for s in shards if len(s)])
+    held = np.unique(labels[allidx])
+    if k * cpc >= 10:
+        assert len(allidx) == len(labels)
+        assert len(held) == 10
+    else:
+        assert len(held) == k * cpc       # distinct classes, no repeats
+        keep = np.isin(labels, held)
+        assert len(allidx) == int(keep.sum())
+
+
+def test_label_partition_rejects_cpc_above_class_count():
+    labels = np.repeat(np.arange(10), 5)
+    with pytest.raises(ValueError, match="classes_per_client"):
+        partition_label(0, labels, 4, classes_per_client=11)
 
 
 @settings(max_examples=10, deadline=None)

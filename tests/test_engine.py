@@ -88,6 +88,7 @@ def test_rt_backends_same_comm_stats(rt_parity, bk):
     assert dataclasses.asdict(loop.stats) == dataclasses.asdict(other.stats)
 
 
+@pytest.mark.slow
 def test_vmap_dispatches_are_constant_in_clients(api):
     """The vectorized backend's dispatch count must not grow with the
     number of participating clients (the loop backend's does)."""
@@ -106,6 +107,7 @@ def test_vmap_dispatches_are_constant_in_clients(api):
     assert eng.backend.dispatches > 3 * counts[8]
 
 
+@pytest.mark.slow
 def test_mesh_dispatches_constant_in_clients_and_below_nonfused_vmap(api):
     """The mesh backend batches the whole population into O(#buckets)
     sharded dispatches per phase — constant in clients AND (on the
@@ -158,6 +160,7 @@ def ragged_clients():
     return make_clients(x, y, shards, batch=20, test_batch=20)
 
 
+@pytest.mark.slow
 def test_fused_dispatches_bounded_by_buckets_and_ragged_parity(api):
     """Multi-bucket client sets stay within the fused dispatch bound
     (the bucket loop runs inside the program) and agree with the loop
@@ -181,6 +184,7 @@ def test_fused_dispatches_bounded_by_buckets_and_ragged_parity(api):
             np.testing.assert_allclose(a.objs, b.objs, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("bk", ["vmap", "mesh"])
 def test_fused_vs_nonfused_parity(api, bk):
     """The fused path must reproduce the per-bucket path: identical
@@ -200,6 +204,7 @@ def test_fused_vs_nonfused_parity(api, bk):
                          out[True].extras["final_master"]) <= 1e-6
 
 
+@pytest.mark.slow
 def test_fused_vs_nonfused_parity_pallas(api):
     """The partially-fused pallas route (one SGD program, Algorithm 3 in
     the kernel) agrees with the non-fused pallas path — both normalize
@@ -221,6 +226,7 @@ def test_fused_vs_nonfused_parity_pallas(api):
                          out[True].extras["final_master"]) <= 1e-6
 
 
+@pytest.mark.slow
 def test_fused_offline_and_fedavg_parity(api):
     """The fused fedavg-population / eval-paired paths (OfflineNas) and
     the fused FedAvg baseline agree with their non-fused selves."""
@@ -323,6 +329,7 @@ print("OK", diff)
 """
 
 
+@pytest.mark.slow
 def test_mesh_parity_forced_8_devices():
     """Run the vmap/mesh parity check on a FORCED 8-device CPU mesh.
 
@@ -343,6 +350,7 @@ def test_mesh_parity_forced_8_devices():
     assert "OK" in proc.stdout
 
 
+@pytest.mark.slow
 def test_offline_backend_parity(api):
     clients = tiny_clients(num_clients=4, n=240)
     out = {}
@@ -358,6 +366,7 @@ def test_offline_backend_parity(api):
             dataclasses.asdict(out[bk].stats)
 
 
+@pytest.mark.slow
 def test_fedavg_baseline_backend_parity(api):
     clients = tiny_clients(num_clients=4, n=240)
     key = np.array([1, 0, 2, 3], np.int32)
@@ -390,6 +399,7 @@ def test_unknown_execution_backend_rejected_at_config_time(api):
                   RunConfig(backend="warp"))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("bk", ["loop", "vmap", "mesh"])
 def test_pallas_aggregate_matches_xla(api, bk):
     """Every execution backend honors aggregate_backend='pallas'
