@@ -22,7 +22,14 @@ the JSON that ``benchmarks/results/`` tracks).  ``--mode availability``
 sweeps the real-time client model (``ClientSimConfig``): 0-50%
 post-download dropout under IID and Dirichlet partitions plus a
 deterministic-straggler scenario, reporting search quality, survivor
-counts and the wasted-download ledger.  ``--mode backends``
+counts and the wasted-download ledger.  ``--mode scale`` sweeps the
+client axis 10^2 -> 10^6 at a fixed per-round participant count over the
+lazy stack (``VirtualClassification`` sample source + index-space
+``partition_iid`` + ``ClientFleet``): per-round wall time and peak live
+bytes must stay flat — fleet size only ever touches O(num_clients)
+integer vectors, never materialized data — and the sweep lands in
+``benchmarks/results/scale.json`` plus a ``"scale"`` point inside
+``BENCH_engine.json``.  ``--mode backends``
 writes ``BENCH_engine.json`` (dispatches/gen, wall-clock/gen, peak live
 bytes per variant, the fused speedups and the scalar-vs-batched-key
 measurement) — the repo root keeps the CI-host point of that perf
@@ -51,8 +58,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import make_api, nsga2
-from repro.data import make_classification, make_clients, \
-    partition_dirichlet, partition_iid, partition_label
+from repro.data import ClientFleet, VirtualClassification, \
+    make_classification, make_clients, partition_dirichlet, partition_iid, \
+    partition_label
 from repro.engine import ClientSimConfig, FedAvgBaseline, FedEngine, \
     OfflineNas, RealTimeNas, RunConfig
 
@@ -447,6 +455,85 @@ def compare_availability(api=None, generations: int = 10,
     return out
 
 
+def scale_sweep(api=None,
+                client_counts=(100, 1000, 10000, 100000, 1000000),
+                sampled: int = 16, generations: int = 4,
+                population: int = 10, seed: int = 0,
+                samples_per_client: int = 8, image: int = 8,
+                batch: int = 2, engine_backend: str = "vmap") -> Dict:
+    """The million-client axis: the same search at a FIXED per-round
+    participant count (``sampled``) while the fleet grows 10^2 -> 10^6.
+
+    Every fleet is fully lazy — a ``VirtualClassification`` source (no
+    dense dataset ever exists), an index-space ``partition_iid`` (one
+    permutation + one cut vector) and a ``ClientFleet`` that
+    materializes only the clients a round actually samples.  The
+    acceptance claim is flatness: per-round steady-state wall time and
+    peak live bytes within 2x across the whole sweep, because nothing
+    downstream of participant sampling ever scales with ``len(fleet)``.
+    ``partition_host_bytes`` (the O(dataset) permutation) is reported
+    separately — it is the one intentionally size-dependent cost."""
+    api = api or build_api()
+    out: Dict = {"sampled": sampled, "generations": generations,
+                 "population": population, "engine_backend": engine_backend,
+                 "samples_per_client": samples_per_client,
+                 "devices": len(jax.devices()), "points": {}}
+    steadies, peaks = [], []
+    for k in client_counts:
+        n = k * samples_per_client
+        t0 = time.time()
+        source = VirtualClassification(seed, n, image=image,
+                                       signal=1.2, noise=0.8)
+        part = partition_iid(seed, n, k)
+        fleet = ClientFleet(source, part, batch=batch, test_batch=batch,
+                            cache_size=4 * sampled)
+        build_s = time.time() - t0
+        eng = FedEngine(api, fleet,
+                        RunConfig(population=population,
+                                  generations=generations, seed=seed,
+                                  participation=sampled / k,
+                                  backend=engine_backend))
+        baseline = _live_bytes()
+        peak = 0
+
+        def sample_peak(gen, report):
+            nonlocal peak
+            peak = max(peak, _live_bytes() - baseline)
+
+        t0 = time.time()
+        res = eng.run(callback=sample_peak)
+        wall = time.time() - t0
+        rounds = [r.round_s for r in res.reports]
+        steady = (sum(rounds[1:]) / (len(rounds) - 1) if len(rounds) > 1
+                  else rounds[0])     # round 1 pays compile; exclude it
+        steadies.append(steady)
+        peaks.append(peak)
+        out["points"][str(k)] = {
+            "clients": k, "participation": sampled / k,
+            "build_s": build_s, "wall_s": wall,
+            "steady_round_s": steady,
+            "round_s": [round(r, 4) for r in rounds],
+            "peak_live_bytes": peak,
+            "partition_host_bytes": part.nbytes,
+            "clients_materialized": fleet.materialized,
+            "clients_cached": fleet.cached,
+            "best_err": float(res.reports[-1].best_err),
+        }
+    # flatness over the WHOLE sweep (max/min, not endpoints — a bulge in
+    # the middle is just as much a scaling leak)
+    steady_ratio = max(steadies) / min(steadies)
+    peak_ratio = max(peaks) / max(min(peaks), 1)
+    out["summary"] = {
+        "client_counts": list(client_counts),
+        "steady_round_s": steadies,
+        "peak_live_bytes": peaks,
+        "steady_round_ratio": steady_ratio,
+        "peak_live_ratio": peak_ratio,
+        "flat_within_2x": steady_ratio < 2.0 and peak_ratio < 2.0,
+    }
+    return out
+
+
 def summarize_front(api, hist) -> List[Dict]:
     """Final-generation Pareto front -> [{key, err, flops}] (Fig 8)."""
     objs = hist["objs"][-1]
@@ -595,14 +682,54 @@ def _run_availability_mode(args) -> Dict:
     return rep
 
 
+def _run_scale_mode(args) -> Dict:
+    api = build_api()
+    population = 10 if args.population is None else args.population
+    gens = 4 if args.generations is None else args.generations
+    rep = scale_sweep(api, client_counts=tuple(args.scale_clients),
+                      sampled=args.scale_sampled, generations=gens,
+                      population=population, seed=args.seed)
+    print(f"\nscale ({args.scale_sampled} sampled/round x {gens} "
+          f"generations, population {rep['population']}, "
+          f"{rep['engine_backend']} backend):")
+    for k, r in rep["points"].items():
+        print(f"{int(k):>9} clients: build {r['build_s']:6.2f}s | steady "
+              f"{r['steady_round_s']:6.2f}s/round | peak "
+              f"{r['peak_live_bytes'] / 1e6:7.1f} MB live | partition "
+              f"{r['partition_host_bytes'] / 1e6:7.1f} MB host | "
+              f"{r['clients_materialized']:3d} clients ever built")
+    s = rep["summary"]
+    print(f"steady-round ratio {s['steady_round_ratio']:.2f}x, peak-bytes "
+          f"ratio {s['peak_live_ratio']:.2f}x across "
+          f"{s['client_counts'][0]} -> {s['client_counts'][-1]} clients "
+          f"(flat within 2x: {s['flat_within_2x']})")
+    if args.scale_out:
+        os.makedirs(os.path.dirname(args.scale_out) or ".", exist_ok=True)
+        with open(args.scale_out, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(f"wrote {args.scale_out}")
+    if args.bench_out:
+        # fold the summary into the recorded perf trajectory next to the
+        # backend timings (leave their keys untouched)
+        bench = {}
+        if os.path.exists(args.bench_out):
+            with open(args.bench_out) as f:
+                bench = json.load(f)
+        bench["scale"] = rep["summary"]
+        with open(args.bench_out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged scale summary into {args.bench_out}")
+    return rep
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(
         description="execution-backend, payload-codec and "
                     "client-availability comparisons")
     ap.add_argument("--mode",
-                    choices=["backends", "codecs", "availability", "both",
-                             "all"],
+                    choices=["backends", "codecs", "availability", "scale",
+                             "both", "all"],
                     default="both")
     ap.add_argument("--generations", type=int, default=None,
                     help="defaults to 25 in backends mode (steady-state "
@@ -645,6 +772,15 @@ def main():
                     help="availability mode: client count")
     ap.add_argument("--avail-samples", type=int, default=960,
                     help="availability mode: total samples")
+    ap.add_argument("--scale-clients", nargs="+", type=int,
+                    default=[100, 1000, 10000, 100000, 1000000],
+                    help="scale mode: fleet sizes to sweep")
+    ap.add_argument("--scale-sampled", type=int, default=16,
+                    help="scale mode: participants per round (fixed "
+                         "across the sweep)")
+    ap.add_argument("--scale-out", default="benchmarks/results/scale.json",
+                    help="scale mode: write the full sweep JSON here "
+                         "('' disables)")
     ap.add_argument("--trajectory-generations", type=int, default=30,
                     help="int8-vs-fp32 trajectory length in codec mode "
                          "(0 disables)")
@@ -660,6 +796,8 @@ def main():
         rep["codecs"] = _run_codec_mode(args)
     if args.mode in ("availability", "all"):
         rep["availability"] = _run_availability_mode(args)
+    if args.mode in ("scale", "all"):
+        rep["scale"] = _run_scale_mode(args)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -1,9 +1,19 @@
-from repro.data.partition import partition_dirichlet, partition_iid, partition_label
-from repro.data.pipeline import ClientDataset, batched, global_batches, make_clients
-from repro.data.synthetic import make_classification, make_lm_stream
+from repro.data.partition import (
+    DirichletPartition, IidPartition, LabelPartition, Partition,
+    partition_dirichlet, partition_iid, partition_label,
+)
+from repro.data.pipeline import (
+    ArraySource, ClientDataset, ClientFleet, batched, global_batches,
+    make_clients, make_fleet,
+)
+from repro.data.synthetic import (
+    VirtualClassification, make_classification, make_lm_stream,
+)
 
 __all__ = [
+    "Partition", "IidPartition", "LabelPartition", "DirichletPartition",
     "partition_dirichlet", "partition_iid", "partition_label",
-    "ClientDataset", "batched", "global_batches", "make_clients",
-    "make_classification", "make_lm_stream",
+    "ArraySource", "ClientDataset", "ClientFleet", "batched",
+    "global_batches", "make_clients", "make_fleet",
+    "VirtualClassification", "make_classification", "make_lm_stream",
 ]

@@ -1,7 +1,8 @@
 """Batching pipeline: shapes client shards into (num_batches, B, ...) arrays
 consumable by scan-based local training, plus ``ClientBatch`` stacking for
-the vectorized (vmap) execution backend and an infinite global-batch
-iterator for the launcher's (non-federated) training path."""
+the vectorized (vmap) execution backend, the lazy ``ClientFleet`` (clients
+materialized on demand from an index-space ``Partition``) and an infinite
+global-batch iterator for the launcher's (non-federated) training path."""
 from __future__ import annotations
 
 import dataclasses
@@ -102,6 +103,94 @@ def make_clients(x: np.ndarray, y: np.ndarray, shards: List[np.ndarray],
                  ) -> List[ClientDataset]:
     return [ClientDataset(i, x[s], y[s], batch, test_batch, seed=seed)
             for i, s in enumerate(shards)]
+
+
+class ArraySource:
+    """In-memory sample source for ``ClientFleet``: any object with
+    ``take(indices) -> (x, y)`` works (see
+    ``repro.data.synthetic.VirtualClassification`` for the
+    materialization-free variant)."""
+
+    def __init__(self, x: np.ndarray, y: np.ndarray):
+        self.x = x
+        self.y = y
+
+    def __len__(self) -> int:
+        return len(self.x)
+
+    def take(self, indices: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        return self.x[indices], self.y[indices]
+
+
+class ClientFleet(Sequence[ClientDataset]):
+    """Lazy ``ClientDataset`` population over (sample source, lazy
+    partition).
+
+    ``fleet[cid]`` materializes client ``cid`` on first access —
+    ``ClientDataset(cid, *source.take(partition[cid]), ...)``, exactly
+    what ``make_clients`` builds eagerly, so a fleet over the same
+    arrays/shards is bit-identical client for client — and keeps the
+    ``cache_size`` most recently used clients alive (true LRU: a hit
+    refreshes recency).  Anything that indexes a client list (the
+    engine, every execution backend) works unchanged, but only the
+    clients a round actually samples ever exist: host memory scales
+    with participation x cache depth, never with ``len(fleet)``.
+
+    ``materialized`` counts lifetime cache misses (client builds) and
+    ``cached`` the currently-live entries — the scale regression tests
+    assert against both."""
+
+    def __init__(self, source, partition, batch: int, test_batch: int,
+                 seed: int = 0, cache_size: int = 128):
+        self.source = source
+        self.partition = partition
+        self.batch = batch
+        self.test_batch = test_batch
+        self.seed = seed
+        self.cache_size = max(1, int(cache_size))
+        self.materialized = 0         # lifetime client builds (cache misses)
+        self._cache: Dict[int, ClientDataset] = {}
+
+    @property
+    def cached(self) -> int:
+        return len(self._cache)
+
+    def __len__(self) -> int:
+        return len(self.partition)
+
+    def __getitem__(self, cid):
+        if isinstance(cid, slice):
+            return [self[i] for i in range(*cid.indices(len(self)))]
+        cid = int(cid)
+        if cid < 0:
+            cid += len(self)
+        if not 0 <= cid < len(self):
+            raise IndexError(f"client {cid} out of range "
+                             f"(fleet of {len(self)})")
+        cache = self._cache
+        if cid in cache:
+            cache[cid] = cache.pop(cid)      # refresh recency (true LRU)
+        else:
+            if len(cache) >= self.cache_size:
+                cache.pop(next(iter(cache)))  # evict least-recently-used
+            x, y = self.source.take(self.partition[cid])
+            cache[cid] = ClientDataset(cid, x, y, self.batch,
+                                       self.test_batch, seed=self.seed)
+            self.materialized += 1
+        return cache[cid]
+
+    def __iter__(self) -> Iterator[ClientDataset]:
+        for i in range(len(self)):
+            yield self[i]
+
+
+def make_fleet(x: np.ndarray, y: np.ndarray, shards, batch: int,
+               test_batch: int, seed: int = 0,
+               cache_size: int = 128) -> ClientFleet:
+    """``make_clients``, lazily: same per-client datasets (bit for bit),
+    materialized on demand with an LRU of ``cache_size`` clients."""
+    return ClientFleet(ArraySource(np.asarray(x), np.asarray(y)), shards,
+                       batch, test_batch, seed=seed, cache_size=cache_size)
 
 
 def global_batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0

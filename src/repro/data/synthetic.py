@@ -31,6 +31,58 @@ def make_classification(seed: int, n: int, image: int = 32, classes: int = 10,
     return x.astype(np.float32), y.astype(np.int32)
 
 
+class VirtualClassification:
+    """Materialization-free class-conditional image source.
+
+    Same prototype-plus-noise structure as ``make_classification`` (the
+    class prototypes come from the identical ``default_rng(seed)``
+    draws), but sample ``i``'s label and noise come from a per-index
+    counter-based stream ``default_rng((seed, i))`` — so ``take(idx)``
+    produces ANY subset of a nominal ``n``-sample dataset in O(len(idx))
+    time and memory, and a 10^6-client fleet's "dataset" never exists as
+    a dense array.  NOT sample-for-sample identical to
+    ``make_classification`` (which draws all labels, then all noise,
+    from one sequential stream — an order a lazy source cannot replay
+    per index); parity-pinned runs use the eager dataset, the scale
+    sweeps use this one.
+
+    Plugs into ``repro.data.pipeline.ClientFleet`` via ``take``."""
+
+    def __init__(self, seed: int, n: int, image: int = 32,
+                 classes: int = 10, channels: int = 3,
+                 signal: float = 1.0, noise: float = 1.0):
+        rng = np.random.default_rng(seed)
+        low = rng.normal(size=(classes, 4, 4, channels))
+        reps = image // 4
+        self.protos = np.repeat(np.repeat(low, reps, axis=1), reps, axis=2)
+        self.seed = seed
+        self.n = n
+        self.image = image
+        self.classes = classes
+        self.channels = channels
+        self.signal = signal
+        self.noise = noise
+
+    def __len__(self) -> int:
+        return self.n
+
+    def take(self, indices) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize the samples at ``indices`` (sorted or not)."""
+        idx = np.asarray(indices, dtype=np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n):
+            raise IndexError(f"sample indices out of range [0, {self.n})")
+        shape = (self.image, self.image, self.channels)
+        x = np.empty((len(idx),) + shape, np.float32)
+        y = np.empty(len(idx), np.int32)
+        for row, i in enumerate(idx):
+            r = np.random.default_rng((self.seed, int(i)))
+            yi = int(r.integers(0, self.classes))
+            y[row] = yi
+            x[row] = (self.protos[yi] * self.signal
+                      + r.normal(size=shape) * self.noise)
+        return x, y
+
+
 def make_lm_stream(seed: int, n_seqs: int, seq_len: int, vocab: int,
                    order_noise: float = 0.1) -> Tuple[np.ndarray, np.ndarray]:
     rng = np.random.default_rng(seed)

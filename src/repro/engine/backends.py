@@ -407,10 +407,13 @@ class LoopBackend:
 
 class StackedClientBase:
     """Host-side stacking, bucketing and caching shared by the batched
-    execution backends (``VmapBackend``, ``MeshBackend``): a
-    device-resident stacked train-shard store, per-group gathers from it,
-    and a memoized stacked test set per participant set.  Subclasses
-    implement the ``ExecutionBackend`` protocol on top."""
+    execution backends (``VmapBackend``, ``MeshBackend``): stack-on-demand
+    stacked train-shard stores keyed by the round's sampled clients,
+    per-group gathers from them, and a memoized stacked test set per
+    participant set.  Only sampled clients are ever stacked (or, with a
+    lazy ``ClientFleet``, even materialized) — device memory scales with
+    participation, never fleet size.  Subclasses implement the
+    ``ExecutionBackend`` protocol on top."""
 
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
                  cfg: RunConfig):
@@ -418,7 +421,7 @@ class StackedClientBase:
         self.clients = clients
         self.cfg = cfg
         self._test_cache = {}
-        self._train_store_cache = None
+        self._train_cache = {}
         self.dispatches = 0
 
     def _stack(self, client_ids, split):
@@ -433,23 +436,34 @@ class StackedClientBase:
         for idxs in shape_buckets(shapes):
             yield self._stack([client_ids[i] for i in idxs], split)
 
-    def _train_store(self):
-        """Device-resident stacked train shards for ALL clients, built
-        once (shards are immutable): [(cid -> row, xb, yb)] per shape
-        bucket.  Groups are then gathered device-side each generation
-        instead of host-restacking and re-transferring the same data."""
-        if self._train_store_cache is None:
-            shapes = [c.train[0].shape for c in self.clients]
+    def _train_store(self, client_ids):
+        """Device-resident stacked train shards for ``client_ids`` ONLY:
+        [(cid -> row, xb, yb)] per shape bucket, built on demand and
+        kept in a size-2 LRU keyed by the canonical (sorted,
+        deduplicated) id tuple — the same policy as ``_test_batches``.
+        Stacking just the round's sampled clients is what keeps device
+        memory proportional to participation x population rather than
+        ``num_clients`` (and what lets a lazy ``ClientFleet`` leave the
+        rest of a 10^6-client fleet unmaterialized); shards are
+        immutable, so entries never go stale, full participation hits
+        the same key every round, and alternating participant sets keep
+        both LRU slots live."""
+        key = tuple(sorted({int(i) for i in client_ids}))
+        cache = self._train_cache
+        if key in cache:
+            cache[key] = cache.pop(key)      # refresh recency (true LRU)
+        else:
+            if len(cache) >= 2:
+                cache.pop(next(iter(cache)))  # evict least-recently-used
+            shards = [self.clients[i].train for i in key]
             store = []
-            for idxs in shape_buckets(shapes):
-                xb = jnp.stack([jnp.asarray(self.clients[i].train[0])
-                                for i in idxs])
-                yb = jnp.stack([jnp.asarray(self.clients[i].train[1])
-                                for i in idxs])
-                store.append(({cid: row for row, cid in enumerate(idxs)},
+            for idxs in shape_buckets([s[0].shape for s in shards]):
+                xb = jnp.stack([jnp.asarray(shards[i][0]) for i in idxs])
+                yb = jnp.stack([jnp.asarray(shards[i][1]) for i in idxs])
+                store.append(({key[i]: row for row, i in enumerate(idxs)},
                               xb, yb))
-            self._train_store_cache = store
-        return self._train_store_cache
+            cache[key] = store
+        return cache[key]
 
     def _client_weight(self, cid, survivors) -> float:
         """A client's aggregation weight this round: 0 for dropped
@@ -465,11 +479,16 @@ class StackedClientBase:
         return float(sum(self._client_weight(c, survivors)
                          for c in client_ids))
 
-    def _group_train_gather(self, client_ids, survivors=None):
+    def _group_train_gather(self, client_ids, survivors=None, store=None):
         """Yield (xb, yb, weights, num_shards) per shape bucket for one
-        client group, gathered from the resident store (dropped clients
-        at weight 0)."""
-        for pos, xb, yb in self._train_store():
+        client group, gathered from ``store`` (the round's sampled-client
+        stack — built from ``client_ids`` themselves when not passed;
+        callers spanning several groups pass the store once so every
+        group gathers from the same round-level stack).  Dropped clients
+        ride at weight 0."""
+        if store is None:
+            store = self._train_store(client_ids)
+        for pos, xb, yb in store:
             sel = [int(i) for i in client_ids if int(i) in pos]
             if not sel:
                 continue
@@ -538,9 +557,12 @@ class StackedClientBase:
         return wrong[:n_keys] / total
 
     def _group_bucket_arrays(self, keys, groups, total, pad_groups=0,
-                             place=jnp.asarray, survivors=None):
-        """Per shape bucket of the resident train store, the group-major
-        stacked arrays the fused / sharded fill programs consume:
+                             place=jnp.asarray, survivors=None,
+                             store=None):
+        """Per shape bucket of the round's sampled-client train store
+        (built from the union of ``groups`` when ``store`` is not
+        passed), the group-major stacked arrays the fused / sharded fill
+        programs consume:
         (keys (Gp, nb) int32, xb (Gp, S, nbat, B, ...), yb, w (Gp, S)
         float32 normalized by ``total``), with the G groups padded to
         Gp = G + ``pad_groups`` and ragged groups padded to S clients —
@@ -557,7 +579,9 @@ class StackedClientBase:
                             np.int32)
         keys_arr[:g_n] = np.stack([np.asarray(k, np.int32) for k in keys])
         karr = place(keys_arr)       # one transfer, shared by buckets
-        for pos, xb_all, yb_all in self._train_store():
+        if store is None:
+            store = self._train_store([c for g in groups for c in g])
+        for pos, xb_all, yb_all in store:
             entries = [[(pos[int(c)], self._client_weight(c, survivors))
                         for c in g if int(c) in pos] for g in groups]
             s_max = max((len(e) for e in entries), default=0)
@@ -703,6 +727,10 @@ class VmapBackend(StackedClientBase):
             return self._train_fill_fused(master, keys, groups, lr,
                                           survivors)
         chunks = []
+        # one sampled-client stack for the whole generation — every group
+        # gathers from it, so the LRU sees a single round-level key
+        all_ids = [int(c) for g in groups for c in g]
+        store = self._train_store(all_ids) if all_ids else None
         for key, group in zip(keys, groups):
             if len(group) == 0:
                 continue
@@ -711,7 +739,8 @@ class VmapBackend(StackedClientBase):
                 continue    # fully-dropped group: its weight-0 rows would
                 # contribute exactly nothing — skip the training dispatch
             jkey = np.asarray(key, np.int32)
-            for xb, yb, w, n in self._group_train_gather(group, survivors):
+            for xb, yb, w, n in self._group_train_gather(group, survivors,
+                                                         store=store):
                 out = self._scan_update(master, jkey, xb, yb, lr)
                 self.dispatches += 1
                 chunks.append((out, np.tile(jkey, (n, 1)), w))

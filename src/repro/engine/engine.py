@@ -57,7 +57,13 @@ class FedEngine:
                  strategy: Optional[Strategy] = None,
                  backend: Union[str, ExecutionBackend, None] = None):
         self.api = api
-        self.clients = list(clients)
+        # indexable client collections (lists, lazy ClientFleet) are kept
+        # as-is — list()-ing a million-client fleet would materialize it;
+        # plain iterables are drained once
+        if hasattr(clients, "__getitem__") and hasattr(clients, "__len__"):
+            self.clients = clients
+        else:
+            self.clients = list(clients)
         self.cfg = cfg or RunConfig()
         self.strategy = strategy or RealTimeNas()
         if backend is None or isinstance(backend, str):

@@ -244,7 +244,7 @@ class MeshBackend(StackedClientBase):
     # -- train_fill ----------------------------------------------------------
 
     def _group_bucket_arrays(self, keys, groups, total, pad_groups=None,
-                             place=None, survivors=None):
+                             place=None, survivors=None, store=None):
         """The base builder with the group axis padded to a mesh multiple
         and every array placed population-sharded (weight-0 padding,
         which also carries the dropped-client survivor masking)."""
@@ -252,7 +252,7 @@ class MeshBackend(StackedClientBase):
         return super()._group_bucket_arrays(
             keys, groups, total, pad_groups=g_pad,
             place=self._put_pop if place is None else place,
-            survivors=survivors)
+            survivors=survivors, store=store)
 
     def train_fill(self, master, keys, groups, lr, survivors=None):
         groups = [np.asarray(g) for g in groups]

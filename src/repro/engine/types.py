@@ -44,7 +44,14 @@ class ClientSimConfig:
         checks in this round (it never receives a download otherwise).
         ``availability_trace`` optionally gives one probability per
         client (device classes: phones vs. plugged-in tablets),
-        overriding the scalar.
+        overriding the scalar.  ``availability_dist`` instead draws each
+        client's per-round check-in probability from a compact
+        distribution spec — ``("bernoulli", q)`` (a ``q`` fraction of
+        clients are always on, the rest never), ``("uniform", lo, hi)``
+        or ``("beta", a, b)`` — keyed by a counter-based per-client
+        stream, so a 10^6-client fleet costs O(1) state instead of a
+        length-``num_clients`` trace array; mutually exclusive with
+        ``availability_trace``.
       * ``dropout`` — probability that a checked-in client fails
         *after* its downloads but *before* any upload: its local
         training is lost (excluded from aggregation, no upload bytes),
@@ -64,6 +71,7 @@ class ClientSimConfig:
     """
     availability: float = 1.0
     availability_trace: Optional[tuple] = None   # per-client P(available)
+    availability_dist: Optional[tuple] = None    # compact per-client spec
     dropout: float = 0.0
     straggler_fraction: float = 0.0
     straggler_slowdown: float = 1.0
@@ -80,6 +88,34 @@ class ClientSimConfig:
                 raise ValueError("availability_trace entries must be in "
                                  f"[0, 1], got {trace}")
             self.availability_trace = trace
+        if self.availability_dist is not None:
+            if self.availability_trace is not None:
+                raise ValueError("availability_dist and availability_trace "
+                                 "are mutually exclusive — pick one")
+            dist = tuple(self.availability_dist)
+            if not dist or not isinstance(dist[0], str):
+                raise ValueError(
+                    "availability_dist must be ('bernoulli', q) | "
+                    f"('uniform', lo, hi) | ('beta', a, b), got {dist!r}")
+            name, params = dist[0], tuple(float(p) for p in dist[1:])
+            if name == "bernoulli":
+                if len(params) != 1 or not 0.0 <= params[0] <= 1.0:
+                    raise ValueError("('bernoulli', q) needs one q in "
+                                     f"[0, 1], got {dist!r}")
+            elif name == "uniform":
+                if (len(params) != 2
+                        or not 0.0 <= params[0] <= params[1] <= 1.0):
+                    raise ValueError("('uniform', lo, hi) needs "
+                                     f"0 <= lo <= hi <= 1, got {dist!r}")
+            elif name == "beta":
+                if len(params) != 2 or min(params) <= 0.0:
+                    raise ValueError("('beta', a, b) needs a, b > 0, "
+                                     f"got {dist!r}")
+            else:
+                raise ValueError(
+                    f"unknown availability_dist {name!r}: expected "
+                    "'bernoulli', 'uniform' or 'beta'")
+            self.availability_dist = (name,) + params
         if not 0.0 <= self.dropout <= 1.0:
             raise ValueError(
                 f"dropout must be in [0, 1], got {self.dropout}")
@@ -104,6 +140,7 @@ class ClientSimConfig:
         Inactive configs take the exact legacy engine path."""
         return (self.availability < 1.0
                 or self.availability_trace is not None
+                or self.availability_dist is not None
                 or self.dropout > 0.0
                 or self.round_deadline is not None)
 

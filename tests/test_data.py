@@ -7,7 +7,8 @@ except ImportError:          # degrade to fixed-seed examples
     from _hyp_fallback import given, settings, strategies as st
 
 from repro.data import (
-    ClientDataset, batched, make_classification, make_clients, make_lm_stream,
+    ClientDataset, Partition, VirtualClassification, batched,
+    make_classification, make_clients, make_fleet, make_lm_stream,
     partition_dirichlet, partition_iid, partition_label,
 )
 
@@ -108,3 +109,251 @@ def test_make_clients_weights_sum():
     clients = make_clients(x, y, shards, batch=20, test_batch=20)
     assert len(clients) == 4
     assert sum(c.n_train for c in clients) <= 400
+
+
+# ---------------------------------------------------------------------------
+# Lazy index-space partitions: bit-exact equivalence with the historical
+# eager implementations (verbatim copies below), large-fleet invariants,
+# determinism, and the dirichlet min_samples guard.
+
+def _eager_iid(seed, n, num_clients):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return [np.sort(s) for s in np.array_split(perm, num_clients)]
+
+
+def _eager_label(seed, labels, num_clients, classes_per_client=5):
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    n_classes = len(classes)
+    cpc = classes_per_client
+    base, extra = divmod(num_clients * cpc, n_classes)
+    quota = np.full(n_classes, base, dtype=np.int64)
+    quota[rng.permutation(n_classes)[:extra]] += 1
+    client_classes = []
+    for _ in range(num_clients):
+        pick = np.lexsort((rng.random(n_classes), -quota))[:cpc]
+        quota[pick] -= 1
+        client_classes.append(set(classes[pick].tolist()))
+    holders = {c: [i for i, cc in enumerate(client_classes) if c in cc]
+               for c in classes}
+    out = [[] for _ in range(num_clients)]
+    for c in classes:
+        if not holders[c]:
+            continue
+        idx = np.where(labels == c)[0]
+        hs = holders[c]
+        idx = rng.permutation(idx)
+        for h, shard in zip(hs, np.array_split(idx, len(hs))):
+            out[h].extend(shard.tolist())
+    return [np.sort(np.asarray(s, dtype=np.int64)) for s in out]
+
+
+def _eager_dirichlet(seed, labels, num_clients, alpha=0.5):
+    rng = np.random.default_rng(seed)
+    out = [[] for _ in range(num_clients)]
+    for c in np.unique(labels):
+        idx = rng.permutation(np.where(labels == c)[0])
+        probs = rng.dirichlet([alpha] * num_clients)
+        cuts = (np.cumsum(probs)[:-1] * len(idx)).astype(int)
+        for h, shard in enumerate(np.split(idx, cuts)):
+            out[h].extend(shard.tolist())
+    return [np.sort(np.asarray(s, dtype=np.int64)) for s in out]
+
+
+def _assert_shards_identical(lazy, eager):
+    assert len(lazy) == len(eager)
+    sizes = lazy.shard_sizes()
+    for i, ref in enumerate(eager):
+        got = lazy[i]
+        assert got.dtype == ref.dtype, (i, got.dtype, ref.dtype)
+        np.testing.assert_array_equal(got, ref)
+        assert sizes[i] == len(ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 400), st.integers(1, 12), st.integers(0, 10_000))
+def test_iid_lazy_matches_eager_bit_for_bit(n, k, seed):
+    _assert_shards_identical(partition_iid(seed, n, k),
+                             _eager_iid(seed, n, k))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 10), st.integers(0, 10_000))
+def test_label_lazy_matches_eager_bit_for_bit(k, cpc, seed):
+    labels = np.repeat(np.arange(10), 40)
+    _assert_shards_identical(
+        partition_label(seed, labels, k, classes_per_client=cpc),
+        _eager_label(seed, labels, k, classes_per_client=cpc))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.floats(0.05, 10.0), st.integers(0, 10_000))
+def test_dirichlet_lazy_matches_eager_bit_for_bit(k, alpha, seed):
+    labels = np.repeat(np.arange(10), 30)
+    _assert_shards_identical(partition_dirichlet(seed, labels, k, alpha),
+                             _eager_dirichlet(seed, labels, k, alpha))
+
+
+def test_partition_sequence_protocol():
+    p = partition_iid(3, 100, 7)
+    assert isinstance(p, Partition) and len(p) == 7
+    np.testing.assert_array_equal(p[-1], p[6])
+    assert [len(s) for s in p[2:5]] == list(p.shard_sizes()[2:5])
+    with pytest.raises(IndexError):
+        p[7]
+    assert p.nbytes > 0
+    mat = p.materialize()
+    assert len(mat) == 7
+    np.testing.assert_array_equal(np.sort(np.concatenate(mat)),
+                                  np.arange(100))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_iid_partition_large_fleet_invariants(seed):
+    """10^5 clients: disjoint full cover, shard_sizes consistent, and
+    construction stores only O(n) integers — no per-client Python
+    objects."""
+    n, k = 400_000, 100_000
+    p = partition_iid(seed, n, k)
+    sizes = p.shard_sizes()
+    assert len(sizes) == k and sizes.sum() == n
+    assert sizes.min() >= n // k and sizes.max() <= n // k + 1
+    # spot-materialized shards agree with the size vector and are
+    # disjoint across a sampled set of clients
+    rng = np.random.default_rng(seed)
+    cids = rng.choice(k, size=64, replace=False)
+    got = [p.indices_for(int(c)) for c in cids]
+    assert all(len(g) == sizes[c] for g, c in zip(got, cids))
+    cat = np.concatenate(got)
+    assert len(np.unique(cat)) == len(cat)
+    assert p.nbytes < 3 * n * 8       # perm + cuts, not shard lists
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_label_partition_large_fleet_invariants(seed):
+    """10^4 clients x exactly-5-classes: every sampled client sees
+    exactly cpc distinct classes; the full cover holds by shard sizes."""
+    k, cpc = 10_000, 5
+    labels = np.repeat(np.arange(10), 5_000)       # 5k samples/class
+    p = partition_label(seed, labels, k, classes_per_client=cpc)
+    sizes = p.shard_sizes()
+    assert sizes.sum() == len(labels)              # k*cpc >= C: full cover
+    rng = np.random.default_rng(seed)
+    for c in rng.choice(k, size=32, replace=False):
+        s = p.indices_for(int(c))
+        assert len(s) == sizes[c]
+        assert len(np.unique(labels[s])) == cpc
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dirichlet_partition_large_fleet_covers(seed):
+    k = 10_000
+    labels = np.repeat(np.arange(10), 200)
+    p = partition_dirichlet(seed, labels, k, alpha=0.5)
+    assert p.shard_sizes().sum() == len(labels)
+    # disjointness across every nonempty shard (2k samples total, cheap)
+    cat = np.concatenate([s for s in p if len(s)])
+    assert len(np.unique(cat)) == len(cat) == len(labels)
+
+
+def test_partitioners_deterministic_under_fixed_seed():
+    labels = np.repeat(np.arange(10), 100)
+    for build in (lambda s: partition_iid(s, 1000, 37),
+                  lambda s: partition_label(s, labels, 37),
+                  lambda s: partition_dirichlet(s, labels, 37, 0.3)):
+        a, b = build(11), build(11)
+        for i in (0, 17, 36):
+            np.testing.assert_array_equal(a[i], b[i])
+        assert not all(np.array_equal(x, y)
+                       for x, y in zip(build(11), build(12)))
+
+
+# -- dirichlet min_samples guard (regression: empty clients used to pass
+# silently and explode much later in batched()/stacking) ------------------
+
+def test_dirichlet_default_still_permits_empty_clients():
+    """min_samples=0 keeps the historical behavior (and RNG stream) bit
+    for bit — including the silent empty shard this seed produces."""
+    labels = np.repeat(np.arange(10), 10)
+    p = partition_dirichlet(0, labels, 30, alpha=0.3)
+    assert int(p.shard_sizes().min()) == 0
+    _assert_shards_identical(p, _eager_dirichlet(0, labels, 30, alpha=0.3))
+
+
+def test_dirichlet_min_samples_rescues_by_redraw():
+    labels = np.repeat(np.arange(10), 10)
+    assert int(partition_dirichlet(2, labels, 30,
+                                   alpha=0.3).shard_sizes().min()) == 0
+    p = partition_dirichlet(2, labels, 30, alpha=0.3, min_samples=1)
+    assert int(p.shard_sizes().min()) >= 1
+    assert p.shard_sizes().sum() == len(labels)
+
+
+def test_dirichlet_min_samples_fails_loudly_when_impossible():
+    labels = np.repeat(np.arange(10), 4)           # 40 samples...
+    with pytest.raises(ValueError, match="min_samples"):
+        partition_dirichlet(0, labels, 50, alpha=0.3,
+                            min_samples=1, resample=5)   # ...50 clients
+
+
+# ---------------------------------------------------------------------------
+# Lazy client fleet + virtual sample source
+
+def test_fleet_matches_make_clients_bit_for_bit():
+    x, y = make_classification(5, 300, image=8)
+    part = partition_iid(5, 300, 6)
+    eager = make_clients(x, y, part.materialize(), batch=10, test_batch=10)
+    fleet = make_fleet(x, y, part, batch=10, test_batch=10)
+    assert len(fleet) == len(eager)
+    for c_lazy, c_eager in zip(fleet, eager):
+        assert c_lazy.cid == c_eager.cid
+        assert c_lazy.weight == c_eager.weight
+        for split in ("train", "test"):
+            for a, b in zip(getattr(c_lazy, split), getattr(c_eager, split)):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_fleet_lru_evicts_and_refreshes():
+    x, y = make_classification(5, 300, image=8)
+    fleet = make_fleet(x, y, partition_iid(5, 300, 10), batch=5,
+                       test_batch=5, cache_size=3)
+    for cid in (0, 1, 2):
+        fleet[cid]
+    fleet[0]                  # refresh 0: now 1 is least-recently-used
+    fleet[3]                  # evicts 1
+    assert fleet.materialized == 4 and fleet.cached == 3
+    assert set(fleet._cache) == {0, 2, 3}
+    fleet[1]                  # rebuild after eviction
+    assert fleet.materialized == 5
+    with pytest.raises(IndexError):
+        fleet[10]
+
+
+def test_virtual_classification_per_index_deterministic():
+    src = VirtualClassification(9, 1_000_000, image=8)
+    xa, ya = src.take([5, 123_456, 999_999])
+    xb, yb = src.take([999_999, 5])        # different batch, same samples
+    np.testing.assert_array_equal(xa[0], xb[1])
+    np.testing.assert_array_equal(xa[2], xb[0])
+    assert ya.dtype == np.int32 and xa.dtype == np.float32
+    assert xa.shape == (3, 8, 8, 3)
+    with pytest.raises(IndexError):
+        src.take([1_000_000])
+
+
+def test_virtual_fleet_scales_without_materialization():
+    """A 10^5-client fleet over a virtual source: accessing a handful of
+    clients touches only their samples and only they are ever built."""
+    from repro.data import ClientFleet
+    k, spc = 100_000, 8
+    src = VirtualClassification(4, k * spc, image=8)
+    fleet = ClientFleet(src, partition_iid(4, k * spc, k), batch=2,
+                        test_batch=2, cache_size=8)
+    for cid in (0, 54_321, 99_999):
+        c = fleet[cid]
+        assert c.train[0].shape[1] == 2
+    assert fleet.materialized == 3 and fleet.cached == 3

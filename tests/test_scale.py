@@ -1,0 +1,331 @@
+"""Million-client scale pins (ISSUE 7).
+
+Three guarantees keep ``num_clients`` a cheap axis, and this file pins
+each one:
+
+  * **sampled-only materialization** — the ``StackedClientBase`` train
+    store stacks only the round's sampled clients (size-2 true LRU,
+    like the test-stack cache), so device memory tracks participation x
+    population, never fleet size; a lazy ``ClientFleet`` additionally
+    leaves unsampled clients unbuilt on the host.
+  * **lazy-vs-eager parity** — at the paper-scale 16-client point the
+    lazy path (index-space partition + ``ClientFleet``) reproduces the
+    eager seed behavior exactly: byte-identical CommStats (logical,
+    wire AND wasted-download ledgers) on every backend, fused and
+    non-fused, and masters within 1e-5 across backends (bitwise within
+    a backend).
+  * **compact availability state** — ``availability_dist`` draws
+    per-client check-in probabilities from counter-based streams, so
+    the simulator holds O(1) state for any fleet size, deterministically
+    per client.
+
+The full 10^2 -> 10^6 sweep itself runs under ``-m slow``
+(``test_scale_sweep_flat_to_a_million_clients``); the fast lane covers
+the same machinery at 10^3.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_api
+from repro.data import (
+    ClientFleet, VirtualClassification, make_classification, make_clients,
+    make_fleet, partition_iid,
+)
+from repro.engine import ClientSimConfig, ClientSimulator, FedEngine, \
+    RunConfig
+
+PARITY_BACKENDS = ("loop", "vmap", "mesh")
+
+
+@pytest.fixture(scope="module")
+def api():
+    return make_api(get_config("cifar-supernet", smoke=True))
+
+
+def eager_16(seed=0):
+    x, y = make_classification(seed, 960, image=8, signal=1.5, noise=0.5)
+    part = partition_iid(seed, 960, 16)
+    return x, y, part
+
+
+# ---------------------------------------------------------------------------
+# sampled-only train store
+# ---------------------------------------------------------------------------
+
+def test_train_store_lru_evicts_and_refreshes_on_hit(api):
+    """The sampled-client train store mirrors the test-stack cache: a
+    size-2 true LRU keyed by the sorted participant tuple, where a hit
+    refreshes recency (so alternating rounds never thrash)."""
+    from repro.engine.backends import VmapBackend
+    x, y, part = eager_16()
+    clients = make_clients(x, y, part, batch=20, test_batch=20)
+    backend = VmapBackend(api, clients, RunConfig())
+    a, b, c = [0, 1, 2], [3, 4], [5, 6, 7]
+    sa = backend._train_store(a)
+    backend._train_store(b)
+    assert backend._train_store(a) is sa       # hit: same stacked arrays
+    backend._train_store(c)                    # evicts b (LRU), not a
+    assert set(backend._train_cache) == {(0, 1, 2), (5, 6, 7)}
+    assert backend._train_store(a) is sa       # survived the eviction
+    # unordered / duplicated ids canonicalize to the same key
+    assert backend._train_store([2, 0, 1, 1]) is sa
+
+
+def test_train_store_stacks_only_sampled_clients(api):
+    """Stack height equals the sampled-client count — device memory from
+    stacking tracks participation, not fleet size."""
+    from repro.engine.backends import VmapBackend
+    x, y, part = eager_16()
+    clients = make_clients(x, y, part, batch=20, test_batch=20)
+    backend = VmapBackend(api, clients, RunConfig())
+    store = backend._train_store([3, 7, 11])
+    rows = sum(xb.shape[0] for _, xb, yb in store)
+    assert rows == 3
+    assert sorted(cid for pos, _, _ in store for cid in pos) == [3, 7, 11]
+
+
+@pytest.mark.parametrize("bk", PARITY_BACKENDS)
+def test_fleet_materialization_tracks_participation(api, bk):
+    """A 400-client lazy fleet at 16/400 participation: every backend
+    touches only the sampled clients, fleet-size-many never exist."""
+    k, spc = 400, 30
+    src = VirtualClassification(2, k * spc, image=8, signal=1.5, noise=0.5)
+    fleet = ClientFleet(src, partition_iid(2, k * spc, k), batch=5,
+                        test_batch=5, cache_size=64)
+    eng = FedEngine(api, fleet,
+                    RunConfig(population=4, generations=2, seed=0,
+                              participation=16 / k, backend=bk))
+    res = eng.run()
+    assert res.reports[-1].best_err is not None
+    # <= sampled-per-round x rounds ever built; far below the fleet
+    assert 16 <= fleet.materialized <= 16 * 2
+    assert fleet.cached <= fleet.cache_size < k
+
+
+def test_train_cache_turns_over_across_rounds(api):
+    """Across rounds with different participant sets the LRU holds the
+    two most recent rounds' stacks and evicts older ones."""
+    from repro.engine.backends import VmapBackend
+    x, y, part = eager_16()
+    fleet = make_fleet(x, y, part, batch=20, test_batch=20)
+    eng = FedEngine(api, fleet,
+                    RunConfig(population=4, generations=3, seed=0,
+                              participation=0.25, backend="vmap"))
+    keys = []
+
+    def snap(gen, report):
+        keys.append(list(eng.backend._train_cache))
+
+    eng.run(callback=snap)
+    assert all(len(ks) <= 2 for ks in keys)
+    assert all(len(k) == 4 for ks in keys for k in ks)   # 4 sampled/round
+
+
+# ---------------------------------------------------------------------------
+# lazy-vs-eager parity pin (the 16-client paper-scale point)
+# ---------------------------------------------------------------------------
+
+PARITY_VARIANTS = (("loop", True), ("vmap", True), ("vmap", False),
+                   ("mesh", True), ("mesh", False))
+
+
+@pytest.fixture(scope="module")
+def lazy_eager_parity(api):
+    """The same dropout search (so the wasted-download ledger is live)
+    through the eager seed path and the lazy fleet, on every backend
+    variant.  Codec-free: int8 quantization would let a one-quantum
+    bucket flip amplify benign cross-backend float noise past the 1e-5
+    master bar — the wire ledger gets its own bitwise eager-vs-lazy pin
+    in ``test_lazy_path_bitwise_with_int8_uplink``."""
+    x, y, part = eager_16()
+    eager = make_clients(x, y, part.materialize(), batch=20, test_batch=20)
+
+    def run(clients, backend, fused):
+        return FedEngine(
+            api, clients,
+            RunConfig(population=4, generations=2, seed=0, lr0=0.01,
+                      backend=backend, fused=fused,
+                      client_sim={"availability": 0.9, "dropout": 0.25,
+                                  "seed": 3})).run()
+
+    out = {}
+    for backend, fused in PARITY_VARIANTS:
+        lazy = make_fleet(x, y, part, batch=20, test_batch=20)
+        out[(backend, fused)] = (run(eager, backend, fused),
+                                 run(lazy, backend, fused))
+    return out
+
+
+@pytest.mark.parametrize("variant", PARITY_VARIANTS,
+                         ids=[f"{b}-{'fused' if f else 'nofused'}"
+                              for b, f in PARITY_VARIANTS])
+def test_lazy_path_bitwise_equals_eager_per_variant(lazy_eager_parity,
+                                                    variant):
+    """Within one backend variant the lazy fleet is BITWISE the eager
+    run: identical report trajectories, identical masters, and
+    byte-identical CommStats including the wasted-download ledger."""
+    res_e, res_l = lazy_eager_parity[variant]
+    assert dataclasses.asdict(res_e.stats) == dataclasses.asdict(res_l.stats)
+    assert res_e.stats.wasted_down_bytes > 0     # dropout: ledger is live
+    for re_, rl in zip(res_e.reports, res_l.reports):
+        np.testing.assert_array_equal(re_.objs, rl.objs)
+        assert re_.best_err == rl.best_err
+        assert re_.n_survivors == rl.n_survivors
+    for p, q in zip(jax.tree.leaves(res_e.extras["final_master"]),
+                    jax.tree.leaves(res_l.extras["final_master"])):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_lazy_path_bitwise_with_int8_uplink(api):
+    """The wire ledger under a lossy codec: eager vs lazy stays BITWISE
+    identical (same backend), with wire bytes below logical and the
+    wasted ledger counting wire bytes."""
+    x, y, part = eager_16()
+
+    def run(clients):
+        return FedEngine(
+            api, clients,
+            RunConfig(population=4, generations=2, seed=0, lr0=0.01,
+                      backend="vmap", uplink_codec="int8",
+                      client_sim={"availability": 0.9, "dropout": 0.25,
+                                  "seed": 3})).run()
+
+    res_e = run(make_clients(x, y, part.materialize(), batch=20,
+                             test_batch=20))
+    res_l = run(make_fleet(x, y, part, batch=20, test_batch=20))
+    assert dataclasses.asdict(res_e.stats) == dataclasses.asdict(res_l.stats)
+    assert res_e.stats.up_wire_bytes < res_e.stats.up_bytes
+    assert res_e.stats.wasted_down_bytes > 0
+    for p, q in zip(jax.tree.leaves(res_e.extras["final_master"]),
+                    jax.tree.leaves(res_l.extras["final_master"])):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_lazy_parity_across_backends(lazy_eager_parity):
+    """Across backend variants (lazy path): byte-identical CommStats
+    everywhere, masters within 1e-5 of the loop reference."""
+    ref = lazy_eager_parity[("loop", True)][1]
+    for variant, (_, res) in lazy_eager_parity.items():
+        assert dataclasses.asdict(res.stats) == \
+            dataclasses.asdict(ref.stats), variant
+        diff = max(float(np.abs(np.asarray(p) - np.asarray(q)).max())
+                   for p, q in zip(
+                       jax.tree.leaves(ref.extras["final_master"]),
+                       jax.tree.leaves(res.extras["final_master"])))
+        assert diff <= 1e-5, (variant, diff)
+        for ra, rb in zip(ref.reports, res.reports):
+            np.testing.assert_allclose(ra.objs, rb.objs, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compact availability state
+# ---------------------------------------------------------------------------
+
+def test_availability_dist_is_deterministic_and_o1_state():
+    cfg = ClientSimConfig(availability_dist=("uniform", 0.3, 0.9), seed=6)
+    a = ClientSimulator(cfg, 10**6)
+    b = ClientSimulator(cfg, 10**6)
+    ids = np.asarray([0, 17, 999_999, 123_456])
+    np.testing.assert_array_equal(a._avail_p(ids), b._avail_p(ids))
+    assert a.speed is None                    # no O(num_clients) arrays
+    p = a._avail_p(ids)
+    assert np.all((p >= 0.3) & (p <= 0.9))
+    # a different seed redraws every client's probability stream
+    c = ClientSimulator(dataclasses.replace(cfg, seed=7), 10**6)
+    assert not np.array_equal(c._avail_p(ids), p)
+
+
+def test_availability_dist_bernoulli_splits_fleet():
+    cfg = ClientSimConfig(availability_dist=("bernoulli", 0.5), seed=1)
+    sim = ClientSimulator(cfg, 4000)
+    p = sim._avail_p(np.arange(4000))
+    assert set(np.unique(p)) <= {0.0, 1.0}
+    assert 0.4 < p.mean() < 0.6
+    # always-on clients survive every round, never-on clients none
+    on = int(np.flatnonzero(p == 1.0)[0])
+    off = int(np.flatnonzero(p == 0.0)[0])
+    for _ in range(5):
+        ctx = sim.draw_round(np.asarray([on, off]))
+        assert on in ctx.survivors and off not in ctx.survivors
+
+
+def test_availability_dist_activates_and_validates():
+    assert ClientSimConfig(availability_dist=("beta", 2.0, 5.0)).is_active
+    assert not ClientSimConfig().is_active
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ClientSimConfig(availability_dist=("bernoulli", 0.5),
+                        availability_trace=(1.0, 1.0))
+    for bad in [("bernoulli", 1.5), ("uniform", 0.9, 0.1),
+                ("beta", 0.0, 1.0), ("zipf", 1.0), ("bernoulli",)]:
+        with pytest.raises(ValueError):
+            ClientSimConfig(availability_dist=bad)
+
+
+def test_availability_dist_runs_through_engine(api):
+    """End to end on a lazy fleet: a Bernoulli(0.6) fleet split loses
+    clients without disturbing determinism (two identical runs agree)."""
+    x, y, part = eager_16()
+    outs = []
+    for _ in range(2):
+        fleet = make_fleet(x, y, part, batch=20, test_batch=20)
+        res = FedEngine(
+            api, fleet,
+            RunConfig(population=4, generations=2, seed=0,
+                      backend="vmap",
+                      client_sim={"availability_dist": ("bernoulli", 0.6),
+                                  "seed": 5})).run()
+        outs.append(res)
+    a, b = outs
+    assert dataclasses.asdict(a.stats) == dataclasses.asdict(b.stats)
+    assert [r.n_survivors for r in a.reports] == \
+        [r.n_survivors for r in b.reports]
+    assert any(r.n_survivors < r.n_sampled for r in a.reports)
+
+
+# ---------------------------------------------------------------------------
+# the sweep itself
+# ---------------------------------------------------------------------------
+
+def _fed_nas():
+    import importlib
+    import os
+    import sys
+    bench = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         "..", "benchmarks"))
+    if bench not in sys.path:
+        sys.path.insert(0, bench)
+    return importlib.import_module("fed_nas")
+
+
+def test_scale_sweep_smoke_small():
+    """10^2 -> 10^3 legs of the benchmark sweep complete with flat peak
+    bytes and fixed per-round participation (the CI smoke leg runs the
+    same code path via --mode scale)."""
+    fed_nas = _fed_nas()
+    rep = fed_nas.scale_sweep(client_counts=(100, 1000), sampled=8,
+                              generations=2, population=4)
+    pts = rep["points"]
+    assert set(pts) == {"100", "1000"}
+    for r in pts.values():
+        assert r["clients_materialized"] <= 8 * 2
+        assert r["peak_live_bytes"] > 0
+    assert rep["summary"]["peak_live_ratio"] < 2.0
+
+
+@pytest.mark.slow
+def test_scale_sweep_flat_to_a_million_clients():
+    """The acceptance sweep: 10^2 -> 10^6 clients at 16 participants per
+    round, per-round wall time and peak live bytes flat within 2x."""
+    fed_nas = _fed_nas()
+    rep = fed_nas.scale_sweep(
+        client_counts=(100, 10_000, 1_000_000), sampled=16,
+        generations=3, population=6)
+    s = rep["summary"]
+    assert s["flat_within_2x"], s
+    big = rep["points"]["1000000"]
+    assert big["clients_materialized"] <= 16 * 3
+    assert big["partition_host_bytes"] < 100e6     # perm + cuts only
