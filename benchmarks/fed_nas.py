@@ -33,7 +33,14 @@ integer vectors, never materialized data — and the sweep lands in
 writes ``BENCH_engine.json`` (dispatches/gen, wall-clock/gen, peak live
 bytes per variant, the fused speedups and the scalar-vs-batched-key
 measurement) — the repo root keeps the CI-host point of that perf
-trajectory and CI uploads it as an artifact.  As a script it forces an
+trajectory and CI uploads it as an artifact.  ``--mode obs`` measures
+the telemetry subsystem itself (``repro.obs``): steady-state overhead
+with telemetry on vs off at the same dispatch-bound point (<3%
+acceptance, recorded as an ``"obs"`` block inside
+``BENCH_engine.json``), the phase-time breakdown from the structured
+round events, the fused recompile counters (a nonzero exit on any
+unexpected retrace — the CI gate) and a JSONL round-event log
+(``--obs-out``).  As a script it forces an
 8-way host device mesh (``--xla_force_host_platform_device_count=8``)
 so the mesh backend has devices to shard over; equivalently set
 XLA_FLAGS yourself.
@@ -63,6 +70,7 @@ from repro.data import ClientFleet, VirtualClassification, \
     partition_label
 from repro.engine import ClientSimConfig, FedAvgBaseline, FedEngine, \
     OfflineNas, RealTimeNas, RunConfig
+from repro.obs import PeakLiveBytes, steady_mean
 
 IMAGE = 16
 RESNET_LIKE_KEY = np.ones(4, dtype=np.int32)   # all-residual master path
@@ -131,13 +139,6 @@ def _max_err_diff(a, b) -> float:
         for x, y in zip(a.reports, b.reports)))
 
 
-def _live_bytes() -> int:
-    """Bytes currently held by live jax arrays — sampled per round, the
-    max is the 'peak live bytes' BENCH_engine.json records (device
-    memory_stats are unavailable on the CPU wheel)."""
-    return int(sum(a.nbytes for a in jax.live_arrays()))
-
-
 def _variant(name: str):
     """'vmap' -> ('vmap', fused=True); 'vmap-nofused' -> ('vmap', False).
     The loop backend has no fused path (the flag is ignored there)."""
@@ -179,27 +180,20 @@ def compare_backends(api=None, clients=None, generations: int = 5,
                         RunConfig(population=population,
                                   generations=generations, seed=seed,
                                   backend=base, fused=fused))
-        # peak is measured as growth over the pre-run baseline, so
+        # peak is growth over the pre-run baseline (PeakLiveBytes), so
         # arrays retained by earlier variants (their final masters in
         # `hists`) don't bias later variants' numbers
-        baseline = _live_bytes()
-        peak = 0
-
-        def sample_peak(gen, report):
-            nonlocal peak
-            peak = max(peak, _live_bytes() - baseline)
-
+        pk = PeakLiveBytes()
         t0 = time.time()
-        res = eng.run(callback=sample_peak)
+        res = eng.run(callback=pk.sample)
         wall = time.time() - t0
         rounds = [r.round_s for r in res.reports]
-        steady = (sum(rounds[1:]) / (len(rounds) - 1) if len(rounds) > 1
-                  else rounds[0])     # gen 1 pays compile; exclude it
         hists[name] = res
         out[name] = {"backend": base, "fused": fused,
-                     "wall_s": wall, "steady_gen_s": steady,
+                     "wall_s": wall,
+                     "steady_gen_s": steady_mean(rounds),
                      "round_s": [round(r, 4) for r in rounds],
-                     "peak_live_bytes": peak,
+                     "peak_live_bytes": pk.growth,
                      "dispatches": eng.backend.dispatches,
                      "dispatches_per_gen": eng.backend.dispatches / generations}
     ref = hists[backends[0]]
@@ -493,27 +487,20 @@ def scale_sweep(api=None,
                                   generations=generations, seed=seed,
                                   participation=sampled / k,
                                   backend=engine_backend))
-        baseline = _live_bytes()
-        peak = 0
-
-        def sample_peak(gen, report):
-            nonlocal peak
-            peak = max(peak, _live_bytes() - baseline)
-
+        pk = PeakLiveBytes()
         t0 = time.time()
-        res = eng.run(callback=sample_peak)
+        res = eng.run(callback=pk.sample)
         wall = time.time() - t0
         rounds = [r.round_s for r in res.reports]
-        steady = (sum(rounds[1:]) / (len(rounds) - 1) if len(rounds) > 1
-                  else rounds[0])     # round 1 pays compile; exclude it
+        steady = steady_mean(rounds)   # round 1 pays compile; excluded
         steadies.append(steady)
-        peaks.append(peak)
+        peaks.append(pk.growth)
         out["points"][str(k)] = {
             "clients": k, "participation": sampled / k,
             "build_s": build_s, "wall_s": wall,
             "steady_round_s": steady,
             "round_s": [round(r, 4) for r in rounds],
-            "peak_live_bytes": peak,
+            "peak_live_bytes": pk.growth,
             "partition_host_bytes": part.nbytes,
             "clients_materialized": fleet.materialized,
             "clients_cached": fleet.cached,
@@ -532,6 +519,95 @@ def scale_sweep(api=None,
         "flat_within_2x": steady_ratio < 2.0 and peak_ratio < 2.0,
     }
     return out
+
+
+def measure_telemetry(api=None, clients=None, generations: int = 25,
+                      population: int = 10, seed: int = 0,
+                      engine_backend: str = "vmap", repeats: int = 3,
+                      jsonl_path: Optional[str] = None) -> Dict:
+    """Measure the telemetry subsystem itself (``repro.obs``) at the
+    dispatch-bound backends point: steady-state per-generation wall time
+    with ``RunConfig.telemetry`` off vs on (the <3% acceptance bar), the
+    phase-time breakdown from the structured round events, and the fused
+    recompile counters — ``fused_fill`` / ``fused_eval_shared`` must
+    trace exactly once, and no program may retrace after round 1
+    (``retrace_ok`` is the CI gate).
+
+    ``repeats`` off/on pairs are interleaved (alternating which side
+    leads each pair) and the *minimum steady round* of each side is
+    compared (every round after the compile
+    round, pooled across repeats).  Min, not mean: scheduler/contention
+    noise is one-sided — it inflates a round but never deflates one —
+    and on a shared machine it dwarfs the effect being measured
+    (run-mean swings of ±20% are routine), so the per-side floor is the
+    faithful estimate of what telemetry itself costs.  Timing runs use
+    a memory sink; the last telemetry-on run writes the JSONL
+    round-event log when ``jsonl_path`` is given (file recreated: one
+    run's events, one line per generation)."""
+    api = api or build_api()
+    if clients is None:
+        clients = build_clients(16, iid=True, n=64, batch=2,
+                                test_batch=2, image=8)
+
+    def run(telemetry):
+        eng = FedEngine(api, clients,
+                        RunConfig(population=population,
+                                  generations=generations, seed=seed,
+                                  backend=engine_backend,
+                                  telemetry=telemetry))
+        t0 = time.time()
+        res = eng.run()
+        return res, time.time() - t0
+
+    repeats = max(1, repeats)
+    off_rounds, on_rounds = [], []
+    res_off = res_on = wall_off = wall_on = None
+    for i in range(repeats):
+        sink = "memory"
+        if i == repeats - 1 and jsonl_path:
+            os.makedirs(os.path.dirname(jsonl_path) or ".", exist_ok=True)
+            if os.path.exists(jsonl_path):
+                os.remove(jsonl_path)  # one run's events, not an append log
+            sink = f"jsonl:{jsonl_path}"
+        # alternate which side of the pair runs first: process-age
+        # effects (allocator warm-up, growing jit caches) would
+        # otherwise bias whichever side always ran second
+        if i % 2 == 0:
+            res_off, wall_off = run(None)
+            res_on, wall_on = run({"sink": sink})
+        else:
+            res_on, wall_on = run({"sink": sink})
+            res_off, wall_off = run(None)
+        off_rounds += [r.round_s for r in res_off.reports[1:]
+                       or res_off.reports]
+        on_rounds += [r.round_s for r in res_on.reports[1:]
+                      or res_on.reports]
+
+    tel = res_on.telemetry
+    off_best, on_best = min(off_rounds), min(on_rounds)
+    unexpected = {k: v for k, v in tel.trace_counts.items() if v > 1}
+    late = {str(e.gen): e.recompiles for e in tel.events[1:] if e.recompiles}
+    return {
+        "generations": generations, "population": population,
+        "clients": len(clients), "engine_backend": engine_backend,
+        "repeats": repeats,
+        "steady_gen_s_off": off_best, "steady_gen_s_on": on_best,
+        "wall_s_off": wall_off, "wall_s_on": wall_on,
+        "overhead_frac": (on_best - off_best) / off_best,
+        "overhead_under_3pct": (on_best - off_best) / off_best < 0.03,
+        # the zero-overhead claim is about numerics before it is about
+        # time: on and off must agree bit for bit
+        "masters_bitwise_equal": _max_param_diff(res_off, res_on) == 0.0,
+        "max_err_diff": _max_err_diff(res_off, res_on),
+        "trace_counts": dict(tel.trace_counts),
+        "unexpected_retraces": unexpected,
+        "late_recompiles": late,
+        "retrace_ok": not unexpected and not late,
+        "phase_totals": {k: round(v, 4)
+                         for k, v in sorted(tel.phase_totals().items())},
+        "events": len(tel.events),
+        "jsonl_path": jsonl_path,
+    }
 
 
 def summarize_front(api, hist) -> List[Dict]:
@@ -722,6 +798,52 @@ def _run_scale_mode(args) -> Dict:
     return rep
 
 
+def _run_obs_mode(args) -> Dict:
+    api = build_api()
+    clients = build_clients(args.clients, iid=True, n=args.samples,
+                            batch=args.batch, test_batch=args.batch,
+                            image=args.image)
+    population = 10 if args.population is None else args.population
+    gens = 25 if args.generations is None else args.generations
+    rep = measure_telemetry(api, clients, generations=gens,
+                            population=population, seed=args.seed,
+                            jsonl_path=args.obs_out or None)
+    print(f"\nobs ({rep['clients']} clients x {rep['generations']} "
+          f"generations, population {rep['population']}, "
+          f"{rep['engine_backend']} backend):")
+    print(f"steady gen: {rep['steady_gen_s_off'] * 1e3:7.1f} ms off | "
+          f"{rep['steady_gen_s_on'] * 1e3:7.1f} ms on | overhead "
+          f"{100 * rep['overhead_frac']:+.2f}% (target <3%: "
+          f"{rep['overhead_under_3pct']}) | masters bitwise equal: "
+          f"{rep['masters_bitwise_equal']}")
+    total = sum(rep["phase_totals"].values()) or 1.0
+    for path, s in rep["phase_totals"].items():
+        print(f"  {path:<24} {s:8.3f}s ({100 * s / total:5.1f}% of "
+              "span time)")
+    print(f"trace counts: {rep['trace_counts']} | retrace ok: "
+          f"{rep['retrace_ok']}")
+    if args.obs_out:
+        print(f"wrote {rep['events']} round events to {args.obs_out}")
+    if args.bench_out:
+        # fold into the recorded perf trajectory next to the backend
+        # timings and the scale summary (leave their keys untouched)
+        bench = {}
+        if os.path.exists(args.bench_out):
+            with open(args.bench_out) as f:
+                bench = json.load(f)
+        bench["obs"] = rep
+        with open(args.bench_out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged obs summary into {args.bench_out}")
+    if not rep["retrace_ok"]:
+        # the CI gate: a fused program that traces more than once (or any
+        # program that retraces after round 1) is a silent perf regression
+        raise SystemExit(
+            f"unexpected fused retraces: trace_counts={rep['trace_counts']} "
+            f"late={rep['late_recompiles']}")
+    return rep
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(
@@ -729,7 +851,7 @@ def main():
                     "client-availability comparisons")
     ap.add_argument("--mode",
                     choices=["backends", "codecs", "availability", "scale",
-                             "both", "all"],
+                             "obs", "both", "all"],
                     default="both")
     ap.add_argument("--generations", type=int, default=None,
                     help="defaults to 25 in backends mode (steady-state "
@@ -781,6 +903,11 @@ def main():
     ap.add_argument("--scale-out", default="benchmarks/results/scale.json",
                     help="scale mode: write the full sweep JSON here "
                          "('' disables)")
+    ap.add_argument("--obs-out",
+                    default="benchmarks/results/obs_rounds.jsonl",
+                    help="obs mode: write the telemetry round-event JSONL "
+                         "here — one line per generation of the last "
+                         "telemetry-on run ('' disables)")
     ap.add_argument("--trajectory-generations", type=int, default=30,
                     help="int8-vs-fp32 trajectory length in codec mode "
                          "(0 disables)")
@@ -798,6 +925,8 @@ def main():
         rep["availability"] = _run_availability_mode(args)
     if args.mode in ("scale", "all"):
         rep["scale"] = _run_scale_mode(args)
+    if args.mode in ("obs", "all"):
+        rep["obs"] = _run_obs_mode(args)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -136,9 +136,11 @@ class ClientFleet(Sequence[ClientDataset]):
     clients a round actually samples ever exist: host memory scales
     with participation x cache depth, never with ``len(fleet)``.
 
-    ``materialized`` counts lifetime cache misses (client builds) and
-    ``cached`` the currently-live entries — the scale regression tests
-    assert against both."""
+    ``materialized`` counts lifetime cache misses (client builds),
+    ``hits`` lifetime cache hits, and ``cached`` the currently-live
+    entries — the scale regression tests assert against the first and
+    last; the telemetry round gauges (``repro.obs``) report all
+    three."""
 
     def __init__(self, source, partition, batch: int, test_batch: int,
                  seed: int = 0, cache_size: int = 128):
@@ -149,6 +151,7 @@ class ClientFleet(Sequence[ClientDataset]):
         self.seed = seed
         self.cache_size = max(1, int(cache_size))
         self.materialized = 0         # lifetime client builds (cache misses)
+        self.hits = 0                 # lifetime cache hits
         self._cache: Dict[int, ClientDataset] = {}
 
     @property
@@ -170,6 +173,7 @@ class ClientFleet(Sequence[ClientDataset]):
         cache = self._cache
         if cid in cache:
             cache[cid] = cache.pop(cid)      # refresh recency (true LRU)
+            self.hits += 1
         else:
             if len(cache) >= self.cache_size:
                 cache.pop(next(iter(cache)))  # evict least-recently-used

@@ -17,7 +17,10 @@ real-time world — per-round availability, post-download dropout,
 stragglers against a deadline — with survivor-masked aggregation on
 every backend and a wasted-bytes CommStats ledger.  See
 docs/architecture.md for the full matrix, the round lifecycle, the
-codec semantics and the availability axis.
+codec semantics and the availability axis.  Observability
+(``RunConfig.telemetry`` -> ``repro.obs.TelemetryConfig``) records
+phase spans, recompile counters, resource gauges and structured round
+events without perturbing any of the above — see docs/observability.md.
 """
 from repro.comm import CodecBackend, PayloadCodec, make_codec
 from repro.engine.availability import ClientSimulator, RoundSim
@@ -30,13 +33,16 @@ from repro.engine.strategies import FedAvgBaseline, OfflineNas, RealTimeNas, \
 from repro.engine.types import AGGREGATE_BACKENDS, BYTES_PER_PARAM, \
     ClientSimConfig, CommStats, EngineResult, ERROR_COUNT_BYTES, \
     RoundReport, RunConfig, history_dict
+from repro.obs import InstrumentedBackend, RoundEvent, Telemetry, \
+    TelemetryConfig, TelemetryResult
 
 __all__ = [
     "AGGREGATE_BACKENDS", "BACKENDS", "BACKEND_NAMES", "BYTES_PER_PARAM",
     "ClientSimConfig", "ClientSimulator", "CodecBackend", "CommStats",
     "ERROR_COUNT_BYTES", "EngineResult", "ExecutionBackend",
-    "FedAvgBaseline", "FedEngine", "LoopBackend", "MeshBackend",
-    "OfflineNas", "PayloadCodec", "RealTimeNas", "RoundReport", "RoundSim",
-    "RunConfig", "Strategy", "VmapBackend", "history_dict", "make_backend",
-    "make_codec",
+    "FedAvgBaseline", "FedEngine", "InstrumentedBackend", "LoopBackend",
+    "MeshBackend", "OfflineNas", "PayloadCodec", "RealTimeNas",
+    "RoundEvent", "RoundReport", "RoundSim", "RunConfig", "Strategy",
+    "Telemetry", "TelemetryConfig", "TelemetryResult", "VmapBackend",
+    "history_dict", "make_backend", "make_codec",
 ]

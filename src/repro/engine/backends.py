@@ -79,10 +79,11 @@ import numpy as np
 from repro.core.aggregate import fedavg, fill_aggregate, \
     fill_aggregate_stacked, fill_partial
 from repro.core.federated import client_update_fn, eval_count_fn, \
-    make_client_update, make_evaluator, weighted_test_error
+    weighted_test_error
 from repro.core.supernet import SupernetAPI
 from repro.data.pipeline import ClientBatch, ClientDataset, shape_buckets
 from repro.engine.types import RunConfig
+from repro.obs import NULL_TELEMETRY, traced
 
 Params = Any
 
@@ -133,11 +134,16 @@ def fill_bucket_partial(upd, mask_fn, master, keys, xb, yb, w, lr):
         def per_client(_, c):
             return None, upd(master, key, c[0], c[1], lr)
 
-        outs = jax.lax.scan(per_client, None, (gx, gy))[1]
-        keys_s = jnp.broadcast_to(key, (gw.shape[0],) + key.shape)
-        masks = jax.vmap(mask_fn)(outs, keys_s)
-        part = fill_partial(master, outs, masks, gw)
-        return jax.tree.map(jnp.add, acc, part), None
+        # named_scope labels (profiler captures / HLO dumps only — they
+        # never change numerics): the local-SGD scan vs the Algorithm 3
+        # partial-sum reduction inside the fused fill program
+        with jax.named_scope("local_sgd"):
+            outs = jax.lax.scan(per_client, None, (gx, gy))[1]
+        with jax.named_scope("fill_aggregate"):
+            keys_s = jnp.broadcast_to(key, (gw.shape[0],) + key.shape)
+            masks = jax.vmap(mask_fn)(outs, keys_s)
+            part = fill_partial(master, outs, masks, gw)
+            return jax.tree.map(jnp.add, acc, part), None
 
     zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), master)
     return jax.lax.scan(per_group, zeros, (keys, xb, yb, w))[0]
@@ -174,6 +180,8 @@ def _tiled_count(ev, params, key, xb, yb, alive, tile):
     full = (m // tile) * tile
     tile_ev = jax.vmap(ev, in_axes=(None, None, 0, 0))
     acc = jnp.zeros((), jnp.int32)
+    # named_scope labels (profiler captures / HLO dumps only — they
+    # never change numerics) for the masked client-axis count scans
     if full:
         fx = xb[:full].reshape((full // tile, tile) + xb.shape[1:])
         fy = yb[:full].reshape((full // tile, tile) + yb.shape[1:])
@@ -182,13 +190,15 @@ def _tiled_count(ev, params, key, xb, yb, alive, tile):
         def tiles(a, c):
             return a + jnp.sum(c[2] * tile_ev(params, key, c[0], c[1])), None
 
-        acc = jax.lax.scan(tiles, acc, (fx, fy, fa))[0]
+        with jax.named_scope("eval_count_tiles"):
+            acc = jax.lax.scan(tiles, acc, (fx, fy, fa))[0]
     if m > full:
         def tail(a, c):
             return a + c[2] * ev(params, key, c[0], c[1]), None
 
-        acc = jax.lax.scan(tail, acc,
-                           (xb[full:], yb[full:], alive[full:]))[0]
+        with jax.named_scope("eval_count_tail"):
+            acc = jax.lax.scan(tail, acc,
+                               (xb[full:], yb[full:], alive[full:]))[0]
     return acc
 
 
@@ -323,14 +333,24 @@ class LoopBackend:
     ``fill_aggregate(backend=cfg.aggregate_backend)``."""
 
     name = "loop"
+    # shared no-op unless FedEngine attaches a real Telemetry (repro.obs)
+    telemetry = NULL_TELEMETRY
 
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
                  cfg: RunConfig):
         self.api = api
         self.clients = clients
         self.cfg = cfg
-        self.update = make_client_update(api, cfg.local_epochs, cfg.momentum)
-        self.evaluate = make_evaluator(api)
+        # the same programs make_client_update/make_evaluator build, with
+        # a per-program trace counter + named_scope label around the body
+        # (repro.obs.traced — tracing runs the Python wrapper, cached
+        # dispatches don't, so the counts are recompile truth)
+        self.trace_counts: dict = {}
+        self.update = jax.jit(traced(
+            "client_update", self.trace_counts,
+            client_update_fn(api, cfg.local_epochs, cfg.momentum)))
+        self.evaluate = jax.jit(traced(
+            "evaluator", self.trace_counts, eval_count_fn(api)))
         self.dispatches = 0
 
     @staticmethod
@@ -415,6 +435,9 @@ class StackedClientBase:
     participation, never fleet size.  Subclasses implement the
     ``ExecutionBackend`` protocol on top."""
 
+    # shared no-op unless FedEngine attaches a real Telemetry (repro.obs)
+    telemetry = NULL_TELEMETRY
+
     def __init__(self, api: SupernetAPI, clients: Sequence[ClientDataset],
                  cfg: RunConfig):
         self.api = api
@@ -423,6 +446,12 @@ class StackedClientBase:
         self._test_cache = {}
         self._train_cache = {}
         self.dispatches = 0
+        # per-jitted-program trace counts (repro.obs.traced) and LRU
+        # hit/miss counters for the stacked-store caches — read by the
+        # telemetry round gauges, free when telemetry is off
+        self.trace_counts: dict = {}
+        self.cache_stats = {"train_store_hits": 0, "train_store_misses": 0,
+                            "test_stack_hits": 0, "test_stack_misses": 0}
 
     def _stack(self, client_ids, split):
         return ClientBatch.stack([self.clients[int(i)] for i in client_ids],
@@ -452,17 +481,24 @@ class StackedClientBase:
         cache = self._train_cache
         if key in cache:
             cache[key] = cache.pop(key)      # refresh recency (true LRU)
+            self.cache_stats["train_store_hits"] += 1
         else:
+            self.cache_stats["train_store_misses"] += 1
             if len(cache) >= 2:
                 cache.pop(next(iter(cache)))  # evict least-recently-used
-            shards = [self.clients[i].train for i in key]
-            store = []
-            for idxs in shape_buckets([s[0].shape for s in shards]):
-                xb = jnp.stack([jnp.asarray(shards[i][0]) for i in idxs])
-                yb = jnp.stack([jnp.asarray(shards[i][1]) for i in idxs])
-                store.append(({key[i]: row for row, i in enumerate(idxs)},
-                              xb, yb))
-            cache[key] = store
+            # a miss is the round's host->device download of the sampled
+            # clients' train shards — the telemetry "download" phase
+            with self.telemetry.span("download"):
+                shards = [self.clients[i].train for i in key]
+                store = []
+                for idxs in shape_buckets([s[0].shape for s in shards]):
+                    xb = jnp.stack([jnp.asarray(shards[i][0])
+                                    for i in idxs])
+                    yb = jnp.stack([jnp.asarray(shards[i][1])
+                                    for i in idxs])
+                    store.append(({key[i]: row
+                                   for row, i in enumerate(idxs)}, xb, yb))
+                cache[key] = store
         return cache[key]
 
     def _client_weight(self, cid, survivors) -> float:
@@ -511,13 +547,16 @@ class StackedClientBase:
         cache = self._test_cache
         if key in cache:
             cache[key] = cache.pop(key)      # refresh recency (true LRU)
+            self.cache_stats["test_stack_hits"] += 1
         else:
+            self.cache_stats["test_stack_misses"] += 1
             if len(cache) >= 2:
                 cache.pop(next(iter(cache)))  # evict least-recently-used
-            cache[key] = [
-                dataclasses.replace(cb, xb=self._place_test(cb.xb),
-                                    yb=self._place_test(cb.yb))
-                for cb in self._group_batches(key, "test")]
+            with self.telemetry.span("download"):
+                cache[key] = [
+                    dataclasses.replace(cb, xb=self._place_test(cb.xb),
+                                        yb=self._place_test(cb.yb))
+                    for cb in self._group_batches(key, "test")]
         return cache[key]
 
     def _place_test(self, arr):
@@ -543,17 +582,19 @@ class StackedClientBase:
         return int(sum(int(m.sum()) * cb.samples_per_shard
                        for cb, m in zip(batches, masks)))
 
-    @staticmethod
-    def _rates(counts, total, n_keys):
+    def _rates(self, counts, total, n_keys):
         """One ``jax.device_get`` per generation: the on-device
         wrong-count vector -> pooled error rates of the first ``n_keys``
         keys (the rest is mesh padding) over ``total`` surviving test
         samples.  ``total == 0`` (nobody evaluated) is pessimistic 1.0,
         never a perfect score — the same convention the strategies and
-        the loop backend use."""
+        the loop backend use.  The blocking fetch is the telemetry
+        ``host_fetch`` phase — with fused eval it is where the host
+        actually waits on the generation's device work."""
         if total == 0:
             return np.ones(n_keys)
-        wrong = np.asarray(jax.device_get(counts), np.int64)
+        with self.telemetry.span("host_fetch"):
+            wrong = np.asarray(jax.device_get(counts), np.int64)
         return wrong[:n_keys] / total
 
     def _group_bucket_arrays(self, keys, groups, total, pad_groups=0,
@@ -681,12 +722,22 @@ class VmapBackend(StackedClientBase):
                 fedavg_population_bucket(upd, ps, keys, xb, yb, wn, lr)
                 for xb, yb, wn in buckets), ps)
 
+        # every jitted program is wrapped by repro.obs.traced: each trace
+        # bumps self.trace_counts[name] (the recompile counter telemetry
+        # reports per round — "fused programs trace once per run" is a
+        # tested invariant) and labels the program with jax.named_scope
+        tc = self.trace_counts
         self._fused_fill = jax.jit(
-            fused_fill, donate_argnums=(0,) if self.donate_master else ())
-        self._fused_uploads = jax.jit(fused_uploads)
-        self._fused_eval_shared = jax.jit(fused_eval_shared)
-        self._fused_eval_paired = jax.jit(fused_eval_paired)
-        self._fused_fedavg = jax.jit(fused_fedavg)
+            traced("fused_fill", tc, fused_fill),
+            donate_argnums=(0,) if self.donate_master else ())
+        self._fused_uploads = jax.jit(traced("fused_uploads", tc,
+                                             fused_uploads))
+        self._fused_eval_shared = jax.jit(traced("fused_eval_shared", tc,
+                                                 fused_eval_shared))
+        self._fused_eval_paired = jax.jit(traced("fused_eval_paired", tc,
+                                                 fused_eval_paired))
+        self._fused_fedavg = jax.jit(traced("fused_fedavg", tc,
+                                            fused_fedavg))
 
         def scan_update(params, key, xb, yb, lr):
             # xb/yb: (L, nb, B, ...) -> stacked updated params (L, ...)
@@ -716,9 +767,10 @@ class VmapBackend(StackedClientBase):
             return jax.lax.scan(one, jnp.zeros((), jnp.int32),
                                 (xb, yb, alive))[0]
 
-        self._scan_update = jax.jit(scan_update)
-        self._scan_update_avg = jax.jit(scan_update_avg)
-        self._eval_tiles = jax.jit(eval_tiles)
+        self._scan_update = jax.jit(traced("scan_update", tc, scan_update))
+        self._scan_update_avg = jax.jit(traced("scan_update_avg", tc,
+                                               scan_update_avg))
+        self._eval_tiles = jax.jit(traced("eval_tiles", tc, eval_tiles))
 
     # -- protocol -----------------------------------------------------------
 

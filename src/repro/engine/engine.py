@@ -28,6 +28,7 @@ from repro.engine.backends import ExecutionBackend, make_backend
 from repro.engine.strategies import RealTimeNas, Strategy
 from repro.engine.types import CommStats, EngineResult, RoundReport, \
     RunConfig
+from repro.obs import NULL_TELEMETRY, InstrumentedBackend, Telemetry, attach
 from repro.optim import round_decay
 
 
@@ -80,6 +81,19 @@ class FedEngine:
                 and self.downlink_codec.is_identity):
             self.backend = CodecBackend(self.backend, self.uplink_codec,
                                         self.downlink_codec)
+        # telemetry (repro.obs): only when RunConfig.telemetry is enabled
+        # does the engine build a real Telemetry and wrap the backend —
+        # the InstrumentedBackend goes OUTERMOST so its fill_train/eval
+        # spans cover codec encode/decode, which nest beneath them.
+        # Disabled runs keep the exact pre-subsystem object graph
+        # (everything sees the shared no-op NULL_TELEMETRY).
+        tcfg = self.cfg.telemetry
+        if tcfg is not None and tcfg.enabled:
+            self.telemetry = Telemetry(tcfg)
+            attach(self.backend, self.telemetry)
+            self.backend = InstrumentedBackend(self.backend, self.telemetry)
+        else:
+            self.telemetry = NULL_TELEMETRY
         self.rng = np.random.default_rng(self.cfg.seed)
         self.stats = CommStats()
         self.reports: list[RoundReport] = []
@@ -108,34 +122,46 @@ class FedEngine:
             reset()
         self.sim = ClientSimulator(cfg.client_sim, len(self.clients))
         self.strategy.setup(self)
-        t0 = t_prev = time.time()
-        for gen in range(1, cfg.generations + 1):
-            lr = float(round_decay(cfg.lr0, cfg.lr_decay, gen - 1))
-            sampled = sample_participants(self.rng, len(self.clients),
-                                          cfg.participation)
-            # availability / dropout draw (sim RNG only — the search RNG
-            # stream above is untouched by the simulation)
-            ctx = self.sim.draw_round(sampled)
-            self.round_ctx = ctx
-            report = self.strategy.round(self, gen, ctx.participants, lr)
-            report.down_gb = self.stats.down_bytes / 1e9
-            report.up_gb = self.stats.up_bytes / 1e9
-            report.train_passes = self.stats.client_train_passes
-            if ctx.active:
-                report.n_sampled = ctx.n_sampled
-                report.n_available = len(ctx.participants)
-                report.n_dropped = ctx.n_dropped
-                report.n_survivors = ctx.n_survivors
-                report.wasted_down_gb = self.stats.wasted_down_bytes / 1e9
-            now = time.time()
-            report.wall_s = now - t0        # cumulative since run() start
-            report.round_s = now - t_prev   # this round's delta
-            t_prev = now
-            self.reports.append(report)
-            if callback:
-                callback(gen, report)
+        tel = self.telemetry
+        tel.start_run(self)
+        with tel.run_capture():   # jax.profiler.trace when configured
+            # perf_counter, not time.time(): wall-clock is not monotonic,
+            # an NTP step mid-run would corrupt the recorded round_s
+            t0 = t_prev = time.perf_counter()
+            for gen in range(1, cfg.generations + 1):
+                lr = float(round_decay(cfg.lr0, cfg.lr_decay, gen - 1))
+                with tel.span("sample"):
+                    sampled = sample_participants(self.rng,
+                                                  len(self.clients),
+                                                  cfg.participation)
+                # availability / dropout draw (sim RNG only — the search
+                # RNG stream above is untouched by the simulation)
+                with tel.span("availability"):
+                    ctx = self.sim.draw_round(sampled)
+                self.round_ctx = ctx
+                report = self.strategy.round(self, gen, ctx.participants,
+                                             lr)
+                report.down_gb = self.stats.down_bytes / 1e9
+                report.up_gb = self.stats.up_bytes / 1e9
+                report.train_passes = self.stats.client_train_passes
+                if ctx.active:
+                    report.n_sampled = ctx.n_sampled
+                    report.n_available = len(ctx.participants)
+                    report.n_dropped = ctx.n_dropped
+                    report.n_survivors = ctx.n_survivors
+                    report.wasted_down_gb = \
+                        self.stats.wasted_down_bytes / 1e9
+                now = time.perf_counter()
+                report.wall_s = now - t0      # cumulative since run()
+                report.round_s = now - t_prev  # this round's delta
+                t_prev = now
+                self.reports.append(report)
+                tel.end_round(gen, report.round_s, self)
+                if callback:
+                    callback(gen, report)
         # a stale RoundSim must not leak into strategies driven manually
         # on this engine afterwards (they fall back to an inactive ctx)
         self.round_ctx = None
         return EngineResult(reports=self.reports, stats=self.stats,
-                            extras=self.strategy.extras(self))
+                            extras=self.strategy.extras(self),
+                            telemetry=tel.result(self))

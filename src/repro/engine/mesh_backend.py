@@ -91,6 +91,7 @@ from repro.engine.backends import StackedClientBase, accumulate_parts, \
 from repro.engine.types import RunConfig
 from repro.launch.mesh import data_axes, make_host_mesh, mesh_axis_size
 from repro.launch.sharding import batch_spec
+from repro.obs import traced
 
 
 class MeshBackend(StackedClientBase):
@@ -140,16 +141,21 @@ class MeshBackend(StackedClientBase):
             fill_body, mesh=self.mesh,
             in_specs=(rep, pop, pop, pop, pop, rep),
             out_specs=rep, check_rep=False)
-        self._fill_partial = jax.jit(fill_sm)
+        # every jitted program is wrapped by repro.obs.traced (recompile
+        # counter + named_scope label, exactly as in VmapBackend); the
+        # fused wrappers below call the RAW shard_map callables, so each
+        # trace bumps exactly one counter — no double counting
+        tc = self.trace_counts
+        self._fill_partial = jax.jit(traced("fill_partial", tc, fill_sm))
 
         # -- train_fill, kernel route: sharded SGD, uploads come back ------
         def uploads_body(master, keys, xb, yb, lr):
             return train_bucket_uploads(upd, master, keys, xb, yb, lr)
 
-        self._train_uploads = jax.jit(shard_map(
+        self._train_uploads = jax.jit(traced("train_uploads", tc, shard_map(
             uploads_body, mesh=self.mesh,
             in_specs=(rep, pop, pop, pop, rep),
-            out_specs=pop, check_rep=False))
+            out_specs=pop, check_rep=False)))
 
         # -- per-individual FedAvg over replicated participants -------------
         def fedavg_body(ps, keys, xb, yb, wn, lr):
@@ -161,7 +167,8 @@ class MeshBackend(StackedClientBase):
             fedavg_body, mesh=self.mesh,
             in_specs=(pop, pop, rep, rep, rep, rep),
             out_specs=pop, check_rep=False)
-        self._fedavg_partial = jax.jit(fedavg_sm)
+        self._fedavg_partial = jax.jit(traced("fedavg_partial", tc,
+                                              fedavg_sm))
 
         # -- sharded-key evaluation over the replicated test stack ----------
         # (``alive`` is the replicated int32 survivor mask — dropped
@@ -175,7 +182,8 @@ class MeshBackend(StackedClientBase):
             eval_shared_body, mesh=self.mesh,
             in_specs=(rep, pop, rep, rep, rep),
             out_specs=pop, check_rep=False)
-        self._eval_shared_counts = jax.jit(eval_shared_sm)
+        self._eval_shared_counts = jax.jit(traced("eval_shared_counts", tc,
+                                                  eval_shared_sm))
 
         def eval_paired_body(ps, keys, xb, yb, alive):
             return eval_paired_bucket_counts(ev, ps, keys, xb, yb, alive,
@@ -185,7 +193,8 @@ class MeshBackend(StackedClientBase):
             eval_paired_body, mesh=self.mesh,
             in_specs=(pop, pop, rep, rep, rep),
             out_specs=pop, check_rep=False)
-        self._eval_paired_counts = jax.jit(eval_paired_sm)
+        self._eval_paired_counts = jax.jit(traced("eval_paired_counts", tc,
+                                                  eval_paired_sm))
 
         # -- fused composition (cfg.fused): the shard_map programs above
         # are traceable, so one jitted wrapper per phase loops the shape
@@ -214,10 +223,14 @@ class MeshBackend(StackedClientBase):
                 for xb, yb, wn in buckets), ps)
 
         self._fused_fill = jax.jit(
-            fused_fill, donate_argnums=(0,) if self.donate_master else ())
-        self._fused_eval_shared = jax.jit(fused_eval_shared)
-        self._fused_eval_paired = jax.jit(fused_eval_paired)
-        self._fused_fedavg = jax.jit(fused_fedavg)
+            traced("fused_fill", tc, fused_fill),
+            donate_argnums=(0,) if self.donate_master else ())
+        self._fused_eval_shared = jax.jit(traced("fused_eval_shared", tc,
+                                                 fused_eval_shared))
+        self._fused_eval_paired = jax.jit(traced("fused_eval_paired", tc,
+                                                 fused_eval_paired))
+        self._fused_fedavg = jax.jit(traced("fused_fedavg", tc,
+                                            fused_fedavg))
 
     # -- placement helpers --------------------------------------------------
 

@@ -20,6 +20,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import TelemetryConfig, TelemetryResult
+
 BYTES_PER_PARAM = 4        # float32 logical payloads
 ERROR_COUNT_BYTES = 4      # one int32 error count per evaluated sub-model
 
@@ -210,6 +212,15 @@ class RunConfig:
         dropout, stragglers against a round deadline.  The default
         simulates nothing and reproduces the synchronous trajectories
         bit for bit; see the ``ClientSimConfig`` docstring.
+
+    Observability (``telemetry``):
+      * a ``repro.obs.TelemetryConfig`` (also accepted as a plain dict,
+        or ``True`` for all defaults) turning on phase spans, recompile
+        counters, resource gauges and structured per-round events on
+        ``EngineResult.telemetry`` — see ``docs/observability.md``.  The
+        default ``None`` means off: the engine builds the exact
+        pre-telemetry object graph and trajectories are bit-identical
+        (pinned by ``tests/test_obs.py``).
     """
     population: int = 10
     generations: int = 500
@@ -229,12 +240,19 @@ class RunConfig:
     downlink_codec: str = "none"        # server->client payload codec
     client_sim: ClientSimConfig = dataclasses.field(
         default_factory=ClientSimConfig)   # availability / dropout model
+    telemetry: Optional[TelemetryConfig] = None   # repro.obs (None = off)
 
     def __post_init__(self):
         if self.client_sim is None:
             self.client_sim = ClientSimConfig()
         elif isinstance(self.client_sim, dict):
             self.client_sim = ClientSimConfig(**self.client_sim)
+        if self.telemetry is True:
+            self.telemetry = TelemetryConfig()
+        elif self.telemetry is False:
+            self.telemetry = None
+        elif isinstance(self.telemetry, dict):
+            self.telemetry = TelemetryConfig(**self.telemetry)
         if self.aggregate_backend not in AGGREGATE_BACKENDS:
             raise ValueError(
                 f"unknown aggregate_backend {self.aggregate_backend!r}; "
@@ -438,6 +456,9 @@ class EngineResult:
     reports: List[RoundReport]
     stats: CommStats
     extras: Dict
+    # collected telemetry (None unless RunConfig.telemetry was enabled):
+    # the retained RoundEvent ring + final per-program trace counts
+    telemetry: Optional[TelemetryResult] = None
 
     def history(self) -> Dict:
         out = history_dict(self.reports)

@@ -1,0 +1,40 @@
+"""`repro.obs` — zero-overhead observability for the federated engine.
+
+Phase spans, JIT trace counters, resource gauges and structured
+round-event sinks; bit-exactly invisible when disabled (the default).
+See ``docs/observability.md`` for the span schema and usage.
+"""
+from repro.obs.backend import InstrumentedBackend
+from repro.obs.gauges import (PeakLiveBytes, host_rss_bytes,
+                              live_device_bytes, steady_mean)
+from repro.obs.sinks import (JsonlSink, MemorySink, TableSink, event_dict,
+                             make_sink, parse_sink_spec)
+from repro.obs.telemetry import (COMM_FIELDS, NULL_TELEMETRY, PHASES,
+                                 NullTelemetry, RoundEvent, Telemetry,
+                                 TelemetryConfig, TelemetryResult, attach,
+                                 innermost, traced)
+
+__all__ = [
+    "COMM_FIELDS",
+    "InstrumentedBackend",
+    "JsonlSink",
+    "MemorySink",
+    "NULL_TELEMETRY",
+    "NullTelemetry",
+    "PHASES",
+    "PeakLiveBytes",
+    "RoundEvent",
+    "TableSink",
+    "Telemetry",
+    "TelemetryConfig",
+    "TelemetryResult",
+    "attach",
+    "event_dict",
+    "host_rss_bytes",
+    "innermost",
+    "live_device_bytes",
+    "make_sink",
+    "parse_sink_spec",
+    "steady_mean",
+    "traced",
+]

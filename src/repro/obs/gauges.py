@@ -1,0 +1,82 @@
+"""Resource gauges and timing helpers shared by telemetry and the
+benchmark driver.
+
+Before ``repro.obs`` every mode of ``benchmarks/fed_nas.py`` hand-rolled
+its own peak-live-bytes probe and steady-state mean; these are the
+single definitions now — the benchmark modes and the per-round telemetry
+gauges both report through them, so "peak live device bytes" means the
+same measurement everywhere it appears.
+
+Everything here is stdlib + jax only (no psutil: host RSS comes from
+``resource.getrusage``, with ``/proc/self/status`` preferred on Linux
+because ru_maxrss is a lifetime peak, not the current footprint).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def live_device_bytes() -> int:
+    """Total bytes of all currently-live jax device arrays."""
+    return sum(a.nbytes for a in jax.live_arrays())
+
+
+def host_rss_bytes() -> int:
+    """Current process resident-set size in bytes (0 if unknowable).
+
+    Prefers ``/proc/self/status`` (current VmRSS); falls back to
+    ``resource.getrusage`` ru_maxrss (a lifetime *peak*, kilobytes on
+    Linux) where /proc is unavailable.
+    """
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    try:
+        import resource
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    except Exception:
+        return 0
+
+
+class PeakLiveBytes:
+    """Track peak live device bytes across a run.
+
+    ``sample`` matches the engine's per-round callback signature
+    (``callback(gen, report)``), so an instance can be passed straight as
+    ``FedEngine.run(callback=peak.sample)``; it also works with no
+    arguments for manual probing.  ``baseline`` is sampled at
+    construction; ``peak`` is the absolute high-water mark since then,
+    and ``growth`` the peak *over the baseline* — the "peak live bytes"
+    number the benchmark modes record, so arrays retained by earlier
+    benchmark variants never bias later ones (exactly the old
+    hand-rolled closures' semantics)."""
+
+    def __init__(self):
+        self.baseline = live_device_bytes()
+        self.peak = self.baseline
+
+    def sample(self, *_args) -> int:
+        self.peak = max(self.peak, live_device_bytes())
+        return self.peak
+
+    @property
+    def growth(self) -> int:
+        return self.peak - self.baseline
+
+
+def steady_mean(values: Sequence[float]) -> Optional[float]:
+    """Steady-state mean: drop the first element (it pays JIT tracing /
+    compilation) and average the rest; with a single element return it
+    as-is; empty input returns None.  This is the exact expression every
+    benchmark mode previously inlined."""
+    if not values:
+        return None
+    if len(values) == 1:
+        return float(values[0])
+    return float(sum(values[1:]) / (len(values) - 1))
